@@ -1,0 +1,19 @@
+"""Channel-use efficiency (the paper's headline claim §IV/VI): CWFL needs
+C(C−1) head-to-head uses + C intra-cluster OTA slots per round, vs K(K−1)
+for fully-decentralized consensus and 1 for a (single) server OTA MAC."""
+from __future__ import annotations
+
+from repro.core.cwfl import channel_uses_per_round
+
+
+def run(clients=(12, 27, 50, 100), clusters=(2, 3, 4, 8)):
+    rows = []
+    for K in clients:
+        for C in clusters:
+            if C >= K:
+                continue
+            u = channel_uses_per_round(K, C)
+            rows.append({"K": K, "C": C, **u,
+                         "saving_vs_decentralized":
+                             u["decentralized"] / u["cwfl"]})
+    return rows

@@ -1,0 +1,48 @@
+"""Kernel micro-benchmarks: interpret-mode Pallas vs pure-jnp oracle.
+
+NOTE: on this CPU-only container the Pallas kernels execute in interpret
+mode (python), so wall-clock favors the jnp oracle — the numbers here are
+correctness/latency bookkeeping, not TPU performance. The TPU-relevant
+analysis is the VMEM/blocking design (DESIGN.md §4) and the roofline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import ota_aggregate_op
+from repro.kernels.ota_aggregate import ota_aggregate
+from repro.kernels.flash_attention import flash_attention as fa_kernel
+from repro.kernels.ref import flash_attention_ref, ota_aggregate_ref
+
+
+def _time(f, *args, n=3):
+    f(*args)  # compile/warm
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(f(*args))
+    return (time.time() - t0) / n * 1e6   # us
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # OTA aggregate: paper-scale K=50 clients, d = MNIST-MLP params (~180k)
+    s = jax.random.normal(key, (50, 180000))
+    w = jax.random.uniform(jax.random.PRNGKey(1), (3, 50))
+    n = 0.1 * jax.random.normal(jax.random.PRNGKey(2), (3, 180000))
+    rows.append(("ota_aggregate_pallas_interp",
+                 _time(lambda: ota_aggregate(s, w, n, tile=2048))))
+    rows.append(("ota_aggregate_jnp_ref",
+                 _time(lambda: ota_aggregate_ref(s, w, n))))
+
+    q = jax.random.normal(key, (1, 4, 512, 64))
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 2, 512, 64))
+    v = jax.random.normal(jax.random.PRNGKey(4), (1, 2, 512, 64))
+    rows.append(("flash_attention_pallas_interp",
+                 _time(lambda: fa_kernel(q, k, v, block_q=128, block_k=128))))
+    rows.append(("flash_attention_jnp_ref",
+                 _time(lambda: flash_attention_ref(q, k, v))))
+    return rows

@@ -1,0 +1,88 @@
+"""Benchmark harness entry point — one benchmark per paper table/figure plus
+system-level extras. Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig2          accuracy-vs-rounds curves (paper Fig. 2)
+  table1        average non-IID accuracy (paper Table I)
+  channel_uses  channel-use efficiency (paper §IV claim)
+  convergence   Theorem-1 O(1/T) decay + SNR noise floor
+  kernels       Pallas kernel micro-benchmarks (interpret mode)
+
+Default is a CPU-scaled grid (same protocol, reduced sizes); ``--full``
+restores the paper's sizes. ``--only fig2`` etc. selects one benchmark.
+The roofline/dry-run analyses are separate (python -m repro.launch.roofline).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="minimal subset for CI smoke")
+    args = ap.parse_args()
+
+    from benchmarks.common import BenchScale
+    scale = BenchScale.full() if args.full else BenchScale()
+    if args.fast:
+        scale = BenchScale(mnist_clients=10, cifar_clients=9,
+                           mnist_train=3000, cifar_train=1800, test=800,
+                           rounds=10, eval_samples=512)
+
+    rows = []
+
+    def emit(name, us, derived):
+        rows.append((name, us, derived))
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    print("name,us_per_call,derived")
+    want = lambda x: args.only in (None, x)
+
+    if want("channel_uses"):
+        from benchmarks import channel_uses
+        t0 = time.time()
+        out = channel_uses.run()
+        us = (time.time() - t0) * 1e6 / max(len(out), 1)
+        k50 = next(r for r in out if r["K"] == 50 and r["C"] == 3)
+        emit("channel_uses_K50_C3", us,
+             f"cwfl={k50['cwfl']};dec={k50['decentralized']};"
+             f"saving={k50['saving_vs_decentralized']:.0f}x")
+
+    if want("kernels"):
+        from benchmarks import kernels_bench
+        for name, us in kernels_bench.run():
+            emit(name, us, "interpret-mode")
+
+    if want("convergence"):
+        from benchmarks import convergence
+        t0 = time.time()
+        out = convergence.run(T=60 if args.fast else 150)
+        us = (time.time() - t0) * 1e6
+        for k, v in out.items():
+            emit(f"convergence_{k}", us / len(out),
+                 f"decay={v['decay_T4_to_T']:.1f}x;floor={v['floor']:.2e}")
+
+    if want("fig2"):
+        from benchmarks import fig2_accuracy
+        out = fig2_accuracy.run(scale, subset=4 if args.fast else None)
+        for r in out:
+            emit(f"fig2_{r['dataset']}_{'iid' if r['iid'] else 'noniid'}_"
+                 f"{r['label']}",
+                 r["seconds_per_round"] * 1e6,
+                 f"final={r['final_acc']:.3f};avg={r['avg_acc']:.3f}")
+
+    if want("table1"):
+        from benchmarks import table1_accuracy
+        out = table1_accuracy.run(
+            scale, datasets=("mnist",) if args.fast else ("mnist", "cifar"))
+        for ds, cols in out.items():
+            for label, acc in cols.items():
+                emit(f"table1_{ds}_{label}", 0.0,
+                     "-" if acc is None else f"avg={acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Reproduce the paper's Figure 2 / Table I experiment grid (scaled).
+
+    PYTHONPATH=src python examples/paper_fig2.py          # ~20 min scaled grid
+    PYTHONPATH=src python examples/paper_fig2.py --fast   # 4 curves, ~4 min
+    PYTHONPATH=src python examples/paper_fig2.py --full   # paper-scale (hours)
+"""
+import argparse
+
+from benchmarks.common import BenchScale
+from benchmarks import fig2_accuracy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    scale = BenchScale.full() if args.full else BenchScale()
+    rows = fig2_accuracy.run(scale, subset=4 if args.fast else None)
+    print("\nsummary (final accuracy):")
+    for r in rows:
+        print(f"  {r['dataset']:6s} {'iid' if r['iid'] else 'noniid':6s} "
+              f"{r['label']:14s} {r['final_acc']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

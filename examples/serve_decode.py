@@ -1,0 +1,46 @@
+"""Batched serving demo: prefill + greedy decode with the delta-cache engine
+(read-only caches inside the step; the engine owns cache writes).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch gemma2-9b
+(reduced config variants of the assigned architectures; CPU-friendly)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models.inputs import make_batch
+from repro.models.transformer import init_params
+from repro.training.serve import greedy_decode
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b", choices=ARCH_NAMES)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    print(f"serving {args.arch} (reduced): {cfg.num_layers}L "
+          f"d={cfg.d_model} pattern={[s.mixer for s in cfg.pattern]}")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(jax.random.PRNGKey(1), cfg, args.prompt_len,
+                       args.batch, kind="prefill")
+
+    t0 = time.time()
+    toks, last_logits = greedy_decode(params, batch, cfg, args.tokens)
+    dt = time.time() - t0
+    print(f"decoded {args.batch}×{args.tokens} tokens in {dt:.1f}s "
+          f"({args.batch*args.tokens/dt:.1f} tok/s on CPU)")
+    for b in range(min(args.batch, 2)):
+        print(f"  seq{b}: {toks[b].tolist()}")
+    assert bool(jnp.all(jnp.isfinite(last_logits.astype(jnp.float32))))
+    print("finite logits ✓  (greedy continuation of random-weight model)")
+
+
+if __name__ == "__main__":
+    main()

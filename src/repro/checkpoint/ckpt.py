@@ -1,0 +1,72 @@
+"""Checkpointing: npz-based pytree save/load with step management.
+
+Layout: <dir>/step_<N>/arrays.npz + tree.json (pytree structure + dtypes).
+Works for parameter pytrees, optimizer states and FL client stacks alike.
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path) or "_root"
+        out[name] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str | Path, step: int, tree: Any) -> Path:
+    d = Path(directory) / f"step_{step:08d}"
+    d.mkdir(parents=True, exist_ok=True)
+    arrays = _flatten_with_names(tree)
+    np.savez(d / "arrays.npz", **arrays)
+    structure = jax.tree.map(lambda x: None, tree)
+    meta = {
+        "step": step,
+        "treedef": str(jax.tree.structure(tree)),
+        "names": list(arrays.keys()),
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+    }
+    (d / "tree.json").write_text(json.dumps(meta))
+    del structure
+    return d
+
+
+def load_checkpoint(directory: str | Path, template: Any,
+                    step: Optional[int] = None) -> Any:
+    """Load into the structure of ``template`` (shapes/dtypes validated)."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    d = directory / f"step_{step:08d}"
+    data = np.load(d / "arrays.npz")
+    names = list(_flatten_with_names(template).keys())
+    leaves_t, treedef = jax.tree_util.tree_flatten(template)
+    out = []
+    for name, leaf in zip(names, leaves_t):
+        arr = data[name]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{name}: checkpoint shape {arr.shape} != "
+                             f"template {leaf.shape}")
+        out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = [int(m.group(1)) for p in directory.iterdir()
+             if (m := re.fullmatch(r"step_(\d+)", p.name))]
+    return max(steps) if steps else None

@@ -1,0 +1,35 @@
+"""Assigned-architecture registry: ``--arch <id>`` resolves here.
+
+Each module defines ``config: ArchConfig`` with the exact assigned dimensions
+(source paper/model-card cited in ``config.source``). ``get_config(name)``
+also accepts the reduced smoke variant via ``reduced=True``.
+"""
+from __future__ import annotations
+
+import importlib
+
+_ARCH_MODULES = {
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "xlstm-125m": "xlstm_125m",
+    "internvl2-2b": "internvl2_2b",
+    "gemma2-9b": "gemma2_9b",
+    "whisper-tiny": "whisper_tiny",
+    "llama3-405b": "llama3_405b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    # the paper's own models
+    "mnist-mlp": "mnist_mlp",
+    "cifar-cnn": "cifar_cnn",
+}
+
+ARCH_NAMES = [n for n in _ARCH_MODULES if n not in ("mnist-mlp", "cifar-cnn")]
+
+
+def get_config(name: str, reduced: bool = False):
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    cfg = mod.config
+    return cfg.reduced() if reduced and hasattr(cfg, "reduced") else cfg

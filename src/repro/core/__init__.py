@@ -1,0 +1,6 @@
+"""CWFL core: the paper's contribution (channel, clustering, aggregation)."""
+from repro.core.topology import Topology, TopologyConfig, make_topology
+from repro.core import channel
+from repro.core import clustering
+from repro.core import cwfl
+from repro.core import baselines

@@ -1,0 +1,144 @@
+"""Baseline aggregation strategies the paper compares against (§II, §V).
+
+* ``fedavg``        — ideal noiseless server aggregation (eq. 2), upper bound.
+* ``cotaf``         — the paper's *modified* COTAF [5]: all K clients transmit
+                      raw (not differenced) parameters OTA to one server with
+                      water-filling power allocation; single noisy MAC.
+* ``decentralized`` — fully-decentralized consensus (eq. 3) over G(V, L) with
+                      Metropolis–Hastings doubly-stochastic mixing; K(K−1)
+                      channel uses per round, per-link receiver noise.
+* FedProx           — a *local-objective* modification (proximal term), see
+                      ``repro.training.local.fedprox_grad`` — composes with
+                      any of the aggregation strategies above (the paper
+                      reports COTAF-Prox and CWFL-Prox).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel as ch
+from repro.core.cwfl import _mix_rows, _per_client_sq_norm
+from repro.core.topology import Topology
+
+
+# ---------------------------------------------------------------------------
+# FedAvg (ideal, noiseless).
+# ---------------------------------------------------------------------------
+
+def fedavg_aggregate(stacked_params, weights: Optional[jnp.ndarray] = None):
+    """θ ← Σ_k p_k θ_k with Σ p_k = 1 (eq. 2); returns (stacked, consensus)."""
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    if weights is None:
+        weights = jnp.full((K,), 1.0 / K, jnp.float32)
+    weights = weights / weights.sum()
+    consensus = _mix_rows(weights[None, :], stacked_params, None, None)
+    consensus = jax.tree.map(lambda x: x[0], consensus)
+    new = jax.tree.map(
+        lambda c: jnp.broadcast_to(c[None], (K,) + c.shape), consensus)
+    return new, consensus
+
+
+# ---------------------------------------------------------------------------
+# COTAF-modified: single-server OTA MAC.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class COTAFState:
+    client_power: jnp.ndarray     # (K,) water-filled P_k
+    total_power: float
+    noise_std: jnp.ndarray        # scalar σ at the server
+
+
+def cotaf_setup(topology: Topology, key: jax.Array,
+                snr_db: Optional[float] = None,
+                server: Optional[int] = None) -> COTAFState:
+    """Water-fill power over client→server links. The 'server' is the client
+    with the best average channel (a base station would sit centrally)."""
+    del key
+    noise_var = topology.noise_var
+    if snr_db is not None:
+        noise_var = ch.snr_db_to_noise_var(topology.total_power, snr_db)
+    mean_gain = (jnp.abs(topology.link_gain) ** 2).mean(axis=1)
+    s = int(jnp.argmax(mean_gain)) if server is None else server
+    g = jnp.abs(topology.link_gain[:, s]) ** 2 / noise_var
+    g = g.at[s].set(jnp.max(g))  # the server's own data arrives locally
+    power = ch.water_filling(g, topology.total_power)
+    return COTAFState(client_power=power,
+                      total_power=float(topology.total_power),
+                      noise_std=jnp.asarray(jnp.sqrt(noise_var), jnp.float32))
+
+
+def cotaf_aggregate(stacked_params, state: COTAFState, key: jax.Array,
+                    normalize: bool = True, precode: bool = True):
+    """θ̃ = Σ_k sqrt(P_k/P) θ_k + w̃ over ONE shared MAC (all K at once)."""
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    p = jnp.sqrt(state.client_power / state.total_power)          # (K,)
+    if precode:
+        sq = _per_client_sq_norm(stacked_params)
+        pre = jnp.sqrt(ch.precoding_factor(state.client_power, sq)
+                       / jnp.maximum(state.client_power, 1e-12))
+        p = p * pre
+    A = p[None, :]                                                # (1, K)
+    eff_std = (state.noise_std / jnp.sqrt(state.total_power))[None]
+    if normalize:
+        rows = jnp.maximum(A.sum(axis=1, keepdims=True), 1e-12)
+        agg = _mix_rows(A / rows, stacked_params, key, eff_std / rows[:, 0])
+    else:
+        agg = _mix_rows(A, stacked_params, key, eff_std)
+    consensus = jax.tree.map(lambda x: x[0], agg)
+    new = jax.tree.map(
+        lambda c: jnp.broadcast_to(c[None], (K,) + c.shape), consensus)
+    return new, consensus
+
+
+# ---------------------------------------------------------------------------
+# Fully-decentralized consensus (eq. 3).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecentralizedState:
+    mixing: jnp.ndarray          # (K, K) symmetric doubly-stochastic W̃
+    noise_std: jnp.ndarray       # scalar per-link receiver noise σ
+    total_power: float
+
+
+def metropolis_weights(adjacency: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric doubly-stochastic mixing from a graph (Metropolis–Hastings):
+    W(i,j) = 1/(1+max(d_i, d_j)) for edges, diagonal = 1 − Σ_j W(i,j)."""
+    adj = adjacency.astype(jnp.float32) * (1.0 - jnp.eye(adjacency.shape[0]))
+    deg = adj.sum(axis=1)
+    denom = 1.0 + jnp.maximum(deg[:, None], deg[None, :])
+    W = adj / denom
+    return W + jnp.diag(1.0 - W.sum(axis=1))
+
+
+def decentralized_setup(topology: Topology, key: jax.Array,
+                        snr_db: Optional[float] = None) -> DecentralizedState:
+    del key
+    noise_var = topology.noise_var
+    if snr_db is not None:
+        noise_var = ch.snr_db_to_noise_var(topology.total_power, snr_db)
+    return DecentralizedState(
+        mixing=metropolis_weights(topology.adjacency),
+        noise_std=jnp.asarray(jnp.sqrt(noise_var), jnp.float32),
+        total_power=float(topology.total_power))
+
+
+def decentralized_aggregate(stacked_params, state: DecentralizedState,
+                            key: jax.Array):
+    """θ_k ← Σ_j W̃(k,j) θ_j + per-neighbour receive noise (K(K−1) uses).
+
+    Effective noise at node k: Σ_{j≠k} W̃(k,j) ṽ_j with ṽ ~ N(0, σ²/P) —
+    std_k = sqrt(Σ_j W̃(k,j)²) σ/√P (same equivalent model as lemma 2).
+    """
+    W = state.mixing
+    off = W * (1.0 - jnp.eye(W.shape[0]))
+    eff_std = jnp.sqrt(jnp.sum(off**2, axis=1)) * (
+        state.noise_std / jnp.sqrt(state.total_power))
+    mixed = _mix_rows(W, stacked_params, key, eff_std)
+    consensus = jax.tree.map(lambda x: jnp.mean(x, axis=0), mixed)
+    return mixed, consensus

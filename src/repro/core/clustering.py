@@ -1,0 +1,122 @@
+"""SNR-aware, data-agnostic client clustering (paper §IV).
+
+Each client runs K-means *offline* on an SNR feature space derived from the
+topology G(V, L) and the inter-client channels h_{k,j}.  The feature vector of
+client k is its link-SNR profile (row k of the K×K link-SNR matrix, in dB,
+with outage links floored): geometrically-close clients share similar SNR
+profiles and land in the same cluster, which is exactly the paper's
+"clusters with high-SNR links" property.  The client nearest each centroid is
+designated cluster-head.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterPlan:
+    """Output of the offline clustering phase."""
+
+    assignment: jnp.ndarray        # (K,) int cluster id per client
+    heads: jnp.ndarray             # (C,) int client index of each cluster-head
+    membership: jnp.ndarray        # (C, K) float {0,1}; membership[c, k]
+    cluster_snr: jnp.ndarray       # (C,) ξ_c: mean member→head link SNR (linear)
+    head_mask: jnp.ndarray         # (K,) {0,1} is-a-head indicator
+
+    @property
+    def num_clusters(self) -> int:
+        return int(self.heads.shape[0])
+
+
+def _kmeans(features: jnp.ndarray, num_clusters: int, key: jax.Array,
+            iters: int = 50) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Plain Lloyd K-means with farthest-point ('kmeans++-lite') init."""
+    K, _ = features.shape
+    C = num_clusters
+
+    # Farthest-point initialization (deterministic given the first pick).
+    first = jax.random.randint(key, (), 0, K)
+
+    def init_body(c, centers_idx):
+        d2 = jnp.min(
+            jnp.sum((features[:, None, :] - features[centers_idx][None], ) [0] ** 2,
+                    axis=-1)
+            + jnp.where(jnp.arange(C)[None, :] >= c, jnp.inf, 0.0),
+            axis=1,
+        )
+        nxt = jnp.argmax(d2)
+        return centers_idx.at[c].set(nxt)
+
+    centers_idx = jnp.zeros((C,), jnp.int32).at[0].set(first)
+    centers_idx = jax.lax.fori_loop(1, C, init_body, centers_idx)
+    centroids = features[centers_idx]
+
+    def lloyd(_, centroids):
+        d2 = jnp.sum((features[:, None, :] - centroids[None]) ** 2, axis=-1)
+        assign = jnp.argmin(d2, axis=1)
+        onehot = jax.nn.one_hot(assign, C, dtype=features.dtype)   # (K, C)
+        counts = jnp.maximum(onehot.sum(0), 1.0)                   # (C,)
+        new = (onehot.T @ features) / counts[:, None]
+        # Keep empty clusters where they were.
+        empty = (onehot.sum(0) == 0)[:, None]
+        return jnp.where(empty, centroids, new)
+
+    centroids = jax.lax.fori_loop(0, iters, lloyd, centroids)
+    d2 = jnp.sum((features[:, None, :] - centroids[None]) ** 2, axis=-1)
+    return jnp.argmin(d2, axis=1), centroids
+
+
+def snr_features(link_snr: jnp.ndarray, adjacency: jnp.ndarray,
+                 floor_db: float = -30.0) -> jnp.ndarray:
+    """Per-client SNR profile features (dB, outage links floored)."""
+    snr_db = 10.0 * jnp.log10(jnp.maximum(link_snr, 1e-12))
+    snr_db = jnp.where(adjacency, snr_db, floor_db)
+    return jnp.maximum(snr_db, floor_db)
+
+
+def make_cluster_plan(link_snr: jnp.ndarray, adjacency: jnp.ndarray,
+                      num_clusters: int, key: jax.Array,
+                      kmeans_iters: int = 50) -> ClusterPlan:
+    """Full offline clustering: K-means on SNR features → heads → ξ_c."""
+    K = link_snr.shape[0]
+    feats = snr_features(link_snr, adjacency)
+    assign, centroids = _kmeans(feats, num_clusters, key, kmeans_iters)
+
+    # Head of cluster c = member closest to centroid c (paper §IV).
+    d2 = jnp.sum((feats[:, None, :] - centroids[None]) ** 2, axis=-1)  # (K, C)
+    d2_masked = jnp.where(assign[:, None] == jnp.arange(num_clusters)[None],
+                          d2, jnp.inf)
+    heads = jnp.argmin(d2_masked, axis=0)                              # (C,)
+
+    membership = (assign[None, :] == jnp.arange(num_clusters)[:, None])
+    membership = membership.astype(jnp.float32)                        # (C, K)
+
+    # ξ_c: average member→head link SNR (excluding the head's zero self-link).
+    snr_to_head = link_snr[heads]                                      # (C, K)
+    head_onehot = jax.nn.one_hot(heads, K, dtype=jnp.float32)          # (C, K)
+    member_not_head = membership * (1.0 - head_onehot)
+    denom = jnp.maximum(member_not_head.sum(1), 1.0)
+    cluster_snr = (snr_to_head * member_not_head).sum(1) / denom
+    # Singleton clusters (head only): treat as max-SNR (noiseless local agg).
+    cluster_snr = jnp.where(member_not_head.sum(1) > 0, cluster_snr,
+                            jnp.max(link_snr))
+
+    head_mask = head_onehot.sum(0)
+    return ClusterPlan(assignment=assign, heads=heads, membership=membership,
+                       cluster_snr=cluster_snr, head_mask=head_mask)
+
+
+def consensus_weights(cluster_snr: jnp.ndarray) -> jnp.ndarray:
+    """Paper eq. (9) weights: W(c, j) = ξ_j / Σ_{j'≠c} ξ_{j'},  W(c, c) = 0.
+
+    Rows index the receiving head c, columns the transmitting head j.
+    Each row sums to 1 over j≠c.
+    """
+    C = cluster_snr.shape[0]
+    xi = jnp.asarray(cluster_snr, jnp.float32)
+    off = 1.0 - jnp.eye(C)
+    denom = (off * xi[None, :]).sum(axis=1, keepdims=True)
+    return off * xi[None, :] / jnp.maximum(denom, 1e-12)

@@ -1,0 +1,199 @@
+"""CWFL: the paper's 3-phase clustered over-the-air aggregation (Algorithm 1).
+
+Operates on *stacked client pytrees*: every leaf has a leading axis K (one
+slice per client).  The same operator is reused by:
+
+* the CPU-scale paper reproduction (vmap-ed clients, parameter aggregation),
+* the production-mesh integration (gradient aggregation inside shard_map,
+  `repro.dist.ota_collectives`), and
+* the Pallas `ota_aggregate` kernel (flat-vector fast path).
+
+Phases (paper §IV):
+  1. intra-cluster OTA MAC:  θ̃_c = Σ_{k∈K_c} p_k θ_k + θ_{v,c} + w̃_c   (eq. 8)
+  2. inter-head consensus:   θ̄_c = Σ_j W(c,j)(θ̃_j + ṽ_j) + θ̃_c        (eq. 9 / lemma 2)
+  3. broadcast:              θ_k ← θ̄_{c(k)}  (error-free downlink)
+
+`normalize=True` renormalizes each phase's weights into a convex combination
+(see DESIGN.md §1: the literal equations have total weight > 1 and diverge
+when iterated; normalization is required to reproduce the paper's Table I).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel as ch
+from repro.core import clustering as cl
+from repro.core.topology import Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class CWFLConfig:
+    num_clusters: int = 3
+    normalize: bool = True          # convex-combination mode (see DESIGN.md)
+    snr_db: Optional[float] = None  # override topology noise to hit overall SNR
+    stationary: bool = True         # paper: channel fixed across rounds
+
+
+@dataclasses.dataclass(frozen=True)
+class CWFLState:
+    """Everything the aggregation operator needs, precomputed offline."""
+
+    plan: cl.ClusterPlan
+    client_power: jnp.ndarray        # (K,) water-filled P_k, Σ = P
+    total_power: float               # P
+    head_noise_std: jnp.ndarray      # (C,) σ_c (receiver AWGN std, phase 1)
+    consensus_noise_std: jnp.ndarray  # (C,) σ used on head→head links (phase 2)
+    mix: jnp.ndarray                 # (C, C) consensus weights W (diag = 0)
+
+    @property
+    def num_clients(self) -> int:
+        return int(self.client_power.shape[0])
+
+    @property
+    def num_clusters(self) -> int:
+        return self.plan.num_clusters
+
+
+def setup(topology: Topology, cfg: CWFLConfig, key: jax.Array) -> CWFLState:
+    """Offline phase: cluster on SNR, water-fill power, build W (paper §IV)."""
+    plan = cl.make_cluster_plan(topology.link_snr, topology.adjacency,
+                                cfg.num_clusters, key)
+    K = topology.num_clients
+
+    noise_var = topology.noise_var
+    if cfg.snr_db is not None:
+        noise_var = ch.snr_db_to_noise_var(topology.total_power, cfg.snr_db)
+
+    # Effective member→head channel gains; heads use their mean head→head gain.
+    head_of = plan.heads[plan.assignment]                    # (K,)
+    gain_to_head = jnp.abs(topology.link_gain[jnp.arange(K), head_of]) ** 2
+    head_rows = jnp.abs(topology.link_gain[plan.heads][:, plan.heads]) ** 2
+    mean_h2h = head_rows.sum() / jnp.maximum(
+        plan.num_clusters * (plan.num_clusters - 1), 1)
+    is_head = plan.head_mask > 0
+    eff_gain = jnp.where(is_head, mean_h2h, gain_to_head) / noise_var
+
+    client_power = ch.water_filling(eff_gain, topology.total_power)
+    sigma = jnp.sqrt(noise_var)
+    head_noise_std = jnp.full((plan.num_clusters,), sigma, jnp.float32)
+    consensus_noise_std = jnp.full((plan.num_clusters,), sigma, jnp.float32)
+    mix = cl.consensus_weights(plan.cluster_snr)
+    return CWFLState(plan=plan, client_power=client_power,
+                     total_power=float(topology.total_power),
+                     head_noise_std=head_noise_std,
+                     consensus_noise_std=consensus_noise_std, mix=mix)
+
+
+# ---------------------------------------------------------------------------
+# Stacked-pytree linear algebra helpers.
+# ---------------------------------------------------------------------------
+
+def _per_client_sq_norm(stacked) -> jnp.ndarray:
+    """(K,) squared parameter norm per client of a K-stacked pytree."""
+    leaves = jax.tree.leaves(stacked)
+    return sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)).reshape(x.shape[0], -1), axis=1)
+        for x in leaves
+    )
+
+
+def _mix_rows(weights: jnp.ndarray, stacked, key: Optional[jax.Array],
+              noise_std_per_row: Optional[jnp.ndarray]):
+    """out[r] = Σ_k weights[r, k] · stacked[k]  (+ N(0, std_r²) per element).
+
+    ``weights``: (R, K); every leaf of ``stacked`` has leading axis K; the
+    result's leaves have leading axis R.
+    """
+    leaves, treedef = jax.tree.flatten(stacked)
+    n = len(leaves)
+    keys = jax.random.split(key, n) if key is not None else [None] * n
+    out = []
+    for x, k in zip(leaves, keys):
+        flat = x.reshape(x.shape[0], -1).astype(jnp.float32)
+        y = weights @ flat                                       # (R, prod)
+        if k is not None and noise_std_per_row is not None:
+            y = y + noise_std_per_row[:, None] * jax.random.normal(
+                k, y.shape, dtype=y.dtype)
+        out.append(y.reshape((weights.shape[0],) + x.shape[1:]).astype(x.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# The aggregation operator (Algorithm 1, sync step t ∈ H).
+# ---------------------------------------------------------------------------
+
+def phase1_weights(state: CWFLState) -> jnp.ndarray:
+    """(C, K) OTA aggregation weights: p_k = sqrt(P_k/P) for members, 1 for the
+    head's virtual client (noiseless local contribution)."""
+    p = jnp.sqrt(state.client_power / state.total_power)         # (K,)
+    w_k = jnp.where(state.plan.head_mask > 0, 1.0, p)
+    return state.plan.membership * w_k[None, :]
+
+
+def aggregate(stacked_params, state: CWFLState, key: jax.Array,
+              normalize: bool = True, precode: bool = True):
+    """One CWFL sync round. Returns (new_stacked_params, consensus_mean).
+
+    ``stacked_params``: pytree, every leaf (K, ...).
+    ``normalize``: convex-combination mode (behaviorally faithful); False gives
+      the literal eq. (8)/(9) weights (for equation-level unit tests).
+    ``precode``: apply eq. (5) norm-limiting precoding (and its exact inverse
+      scaling at the receiver, the COTAF-style de-precoding). With
+      normalization these cancel in expectation; retained for faithfulness of
+      the transmitted power constraint.
+    """
+    k1, k2 = jax.random.split(key)
+    A = phase1_weights(state)                                    # (C, K)
+
+    # eq. (5): clients whose ‖θ‖² exceeds 1 scale down to meet E‖x‖² ≤ P_k.
+    if precode:
+        sq = _per_client_sq_norm(stacked_params)                 # (K,)
+        pre = jnp.sqrt(
+            ch.precoding_factor(state.client_power, sq)
+            / jnp.maximum(state.client_power, 1e-12))            # (K,) ≤ 1
+        # Heads (virtual clients) are noiseless/local: no precoding.
+        pre = jnp.where(state.plan.head_mask > 0, 1.0, pre)
+        A = A * pre[None, :]
+
+    # Phase 1: OTA superposition at each head + receiver AWGN, scaled by
+    # 1/sqrt(P) at the receiver (eq. 8) -> effective noise std σ_c/sqrt(P).
+    eff_std1 = state.head_noise_std / jnp.sqrt(state.total_power)
+    if normalize:
+        rows = jnp.maximum(A.sum(axis=1, keepdims=True), 1e-12)
+        theta_tilde = _mix_rows(A / rows, stacked_params, k1,
+                                eff_std1 / rows[:, 0])
+    else:
+        theta_tilde = _mix_rows(A, stacked_params, k1, eff_std1)
+
+    # Phase 2: heads exchange θ̃ over C(C-1) channel uses; receiver c mixes
+    # with SNR weights W(c, j) plus its own θ̃_c (eq. 9, lemma 2).
+    B = state.mix + jnp.eye(state.num_clusters)
+    eff_std2 = state.consensus_noise_std / jnp.sqrt(state.total_power)
+    # per-row effective noise: κ_c = sqrt(Σ_j W(c,j)²) · σ̃ (lemma 2 with
+    # independent per-link noise); self-link is local, no noise.
+    kappa = jnp.sqrt(jnp.sum(state.mix**2, axis=1)) * eff_std2
+    if normalize:
+        row_sums = B.sum(axis=1, keepdims=True)
+        B = B / row_sums
+        kappa = kappa / row_sums[:, 0]  # same renormalization applied to noise
+    theta_bar = _mix_rows(B, theta_tilde, k2, kappa)
+
+    # Phase 3: error-free downlink broadcast θ_k ← θ̄_{c(k)}.
+    new_params = _mix_rows(state.plan.membership.T, theta_bar, None, None)
+
+    consensus = jax.tree.map(lambda x: jnp.mean(x, axis=0), theta_bar)
+    return new_params, consensus
+
+
+def channel_uses_per_round(num_clients: int, num_clusters: int) -> dict:
+    """Paper's efficiency claim: CWFL needs C(C−1) consensus channel uses +
+    1 OTA slot per cluster, vs K(K−1) for fully-decentralized FL."""
+    return {
+        "cwfl": num_clusters * (num_clusters - 1) + num_clusters,
+        "decentralized": num_clients * (num_clients - 1),
+        "server_ota": 1,
+    }

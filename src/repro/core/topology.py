@@ -1,0 +1,96 @@
+"""Client geometry, pathloss and outage-derived graph topology (paper §III, §V).
+
+The paper places K wireless devices in a plane; each link (k, j) is a
+Rayleigh-faded channel with distance-dependent pathloss
+
+    h_{k,j} = sqrt(P_k) * (d_0^{-1} d_{k,j})^{-ς/2} * h̃_{k,j},   h̃ ~ CN(0, 1)
+
+(the paper writes the exponent as +ς/2 on (d0^{-1} d)^{ς/2} multiplying the
+transmit amplitude; physically the received amplitude decays with distance, so
+we use the decaying convention and note it).  Pilot signals determine which
+links are in outage; surviving links define the undirected graph G(V, L).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyConfig:
+    num_clients: int = 50
+    area_size: float = 100.0          # clients placed uniformly in [0, area]^2
+    d0: float = 1.0                   # reference distance (m)
+    pathloss_exp: float = 2.2         # ς
+    noise_var: float = 1.0            # receiver AWGN variance sigma^2 (pre power-scale)
+    total_power: float = 1e4          # P = sum_k P_k (40 dB overall SNR for sigma^2=1)
+    outage_snr_db: float = -5.0       # links below this SNR are in outage
+    num_hotspots: int = 3             # geometric hotspots -> natural SNR clusters
+    hotspot_std: float = 6.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Static wireless topology: positions, complex link gains, SNRs, graph."""
+
+    positions: jnp.ndarray            # (K, 2)
+    link_gain: jnp.ndarray            # (K, K) complex gains h̃ * pathloss  (diag=0)
+    link_snr: jnp.ndarray             # (K, K) |h|^2 * Pref / sigma^2  (diag=0)
+    adjacency: jnp.ndarray            # (K, K) bool, outage-pruned graph L
+    noise_var: float
+    total_power: float
+
+    @property
+    def num_clients(self) -> int:
+        return int(self.positions.shape[0])
+
+    def snr_db(self) -> jnp.ndarray:
+        return 10.0 * jnp.log10(jnp.maximum(self.link_snr, 1e-12))
+
+
+def make_topology(key: jax.Array, cfg: Optional[TopologyConfig] = None) -> Topology:
+    """Draw a stationary topology (paper: channel constant across rounds)."""
+    cfg = cfg or TopologyConfig()
+    K = cfg.num_clients
+    k_pos, k_hot, k_re, k_im = jax.random.split(key, 4)
+
+    # Clients cluster geometrically around hotspots (models D2D neighbourhoods;
+    # this is what makes SNR-based K-means produce meaningful clusters).
+    hot = jax.random.uniform(k_hot, (cfg.num_hotspots, 2)) * cfg.area_size
+    assign = jax.random.randint(k_pos, (K,), 0, cfg.num_hotspots)
+    jitter = jax.random.normal(jax.random.fold_in(k_pos, 1), (K, 2)) * cfg.hotspot_std
+    positions = hot[assign] + jitter
+
+    # Pairwise distances and Rayleigh small-scale fading.
+    diff = positions[:, None, :] - positions[None, :, :]
+    dist = jnp.sqrt(jnp.sum(diff**2, axis=-1) + 1e-9)
+    dist = jnp.maximum(dist, cfg.d0)
+    pathloss_amp = (dist / cfg.d0) ** (-cfg.pathloss_exp / 2.0)
+    re = jax.random.normal(k_re, (K, K)) / jnp.sqrt(2.0)
+    im = jax.random.normal(k_im, (K, K)) / jnp.sqrt(2.0)
+    h_tilde = re + 1j * im
+    # Symmetric channel (reciprocity): use upper triangle mirrored.
+    iu = jnp.triu(jnp.ones((K, K), bool), k=1)
+    h_tilde = jnp.where(iu, h_tilde, jnp.conj(h_tilde.T))
+    link_gain = pathloss_amp * h_tilde
+    link_gain = link_gain * (1.0 - jnp.eye(K))
+
+    # Link SNR at reference (equal-split) power P/K per client.
+    p_ref = cfg.total_power / K
+    link_snr = (jnp.abs(link_gain) ** 2) * p_ref / cfg.noise_var
+    link_snr = link_snr * (1.0 - jnp.eye(K))
+
+    snr_db = 10.0 * jnp.log10(jnp.maximum(link_snr, 1e-12))
+    adjacency = (snr_db >= cfg.outage_snr_db) & ~jnp.eye(K, dtype=bool)
+
+    return Topology(
+        positions=positions,
+        link_gain=link_gain,
+        link_snr=link_snr,
+        adjacency=adjacency,
+        noise_var=cfg.noise_var,
+        total_power=cfg.total_power,
+    )

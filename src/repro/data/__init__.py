@@ -1,0 +1,7 @@
+from repro.data.synthetic import (
+    SyntheticImageConfig,
+    make_synthetic_images,
+    partition_iid,
+    partition_noniid,
+)
+from repro.data.tokens import make_token_dataset

@@ -1,0 +1,120 @@
+"""Synthetic stand-ins for MNIST / CIFAR (container is offline; DESIGN.md §8).
+
+Images are drawn from a fixed random *teacher*: each of the 10 classes has a
+smooth prototype image; a sample is prototype[y] + structured noise. A small
+MLP/CNN reaches high accuracy on it, and the FL dynamics the paper studies
+(noisy OTA aggregation, non-IID label sharding) are preserved:
+
+* ``mnist-like``: 28×28×1, 60k train / 10k test, 10 classes.
+* ``cifar-like``: 32×32×3, 50k train / 10k test, 10 classes.
+
+Partitioners follow §V exactly: IID = random equal split across K clients;
+non-IID = sort by label, cut into 200 disjoint shards, deal ``shards_per
+client`` shards to each client.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticImageConfig:
+    name: str = "mnist-like"
+    height: int = 28
+    width: int = 28
+    channels: int = 1
+    num_classes: int = 10
+    num_train: int = 60000
+    num_test: int = 10000
+    noise_std: float = 0.35      # intra-class variability
+    smoothness: int = 4          # prototype low-res grid (upsampled -> smooth)
+
+    @staticmethod
+    def mnist_like(num_train: int = 60000, num_test: int = 10000):
+        return SyntheticImageConfig("mnist-like", 28, 28, 1, 10,
+                                    num_train, num_test)
+
+    @staticmethod
+    def cifar_like(num_train: int = 50000, num_test: int = 10000):
+        return SyntheticImageConfig("cifar-like", 32, 32, 3, 10,
+                                    num_train, num_test)
+
+
+def _prototypes(key, cfg: SyntheticImageConfig) -> jnp.ndarray:
+    """Smooth class prototypes: low-res noise, bilinear-upsampled."""
+    low = jax.random.normal(
+        key, (cfg.num_classes, cfg.smoothness, cfg.smoothness, cfg.channels))
+    protos = jax.image.resize(
+        low, (cfg.num_classes, cfg.height, cfg.width, cfg.channels),
+        method="bilinear")
+    return protos / jnp.maximum(jnp.std(protos), 1e-6)
+
+
+def make_synthetic_images(key: jax.Array, cfg: SyntheticImageConfig
+                          ) -> Tuple[Tuple[jnp.ndarray, jnp.ndarray],
+                                     Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Returns ((x_train, y_train), (x_test, y_test))."""
+    k_proto, k_ytr, k_yte, k_ntr, k_nte = jax.random.split(key, 5)
+    protos = _prototypes(k_proto, cfg)
+
+    def sample(ky, kn, n):
+        y = jax.random.randint(ky, (n,), 0, cfg.num_classes)
+        noise = cfg.noise_std * jax.random.normal(
+            kn, (n, cfg.height, cfg.width, cfg.channels))
+        x = protos[y] + noise
+        return x.astype(jnp.float32), y
+
+    train = sample(k_ytr, k_ntr, cfg.num_train)
+    test = sample(k_yte, k_nte, cfg.num_test)
+    return train, test
+
+
+# ---------------------------------------------------------------------------
+# Client partitioners (paper §V).
+# ---------------------------------------------------------------------------
+
+def partition_iid(key: jax.Array, x: jnp.ndarray, y: jnp.ndarray,
+                  num_clients: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Random equal split. Returns stacked (K, N_k, ...) arrays."""
+    n = x.shape[0]
+    per = n // num_clients
+    perm = jax.random.permutation(key, n)[: per * num_clients]
+    xs = x[perm].reshape((num_clients, per) + x.shape[1:])
+    ys = y[perm].reshape((num_clients, per))
+    return xs, ys
+
+
+def partition_noniid(key: jax.Array, x: jnp.ndarray, y: jnp.ndarray,
+                     num_clients: int, shards_per_client: int,
+                     num_shards: int = 200
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Paper's label-sorted sharding: sort by class, 200 disjoint shards,
+    deal ``shards_per_client`` to each client (MNIST: 4, CIFAR: 7)."""
+    n = x.shape[0]
+    order = jnp.argsort(y, stable=True)
+    usable = (n // num_shards) * num_shards
+    order = order[:usable]
+    shard_size = usable // num_shards
+    shards = order.reshape(num_shards, shard_size)
+    shard_perm = jax.random.permutation(key, num_shards)
+    need = num_clients * shards_per_client
+    if need > num_shards:
+        raise ValueError(f"need {need} shards but only {num_shards} exist")
+    chosen = shard_perm[:need].reshape(num_clients, shards_per_client)
+    idx = shards[chosen].reshape(num_clients, shards_per_client * shard_size)
+    return x[idx], y[idx]
+
+
+def label_histogram(ys: jnp.ndarray, num_classes: int = 10) -> np.ndarray:
+    """(K, num_classes) per-client label counts — for non-IID sanity checks."""
+    K = ys.shape[0]
+    out = np.zeros((K, num_classes), np.int64)
+    ys = np.asarray(ys)
+    for k in range(K):
+        out[k] = np.bincount(ys[k], minlength=num_classes)
+    return out

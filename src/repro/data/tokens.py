@@ -1,0 +1,37 @@
+"""Synthetic LM token streams (for the transformer examples/smoke tests).
+
+A fixed random first-order Markov chain over the vocabulary gives sequences
+with learnable structure (per-token cross-entropy drops well below uniform as
+the model learns the transition matrix). Offline container ⇒ no real corpora.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_token_dataset(key: jax.Array, vocab_size: int, num_sequences: int,
+                       seq_len: int, branching: int = 8):
+    """Returns int32 tokens (num_sequences, seq_len + 1); use [:-1]/[1:] as
+    inputs/targets.  Each token transitions to one of ``branching`` successors
+    under a fixed random table, with occasional uniform resets."""
+    k_table, k_start, k_choice, k_reset, k_resetv = jax.random.split(key, 5)
+    table = jax.random.randint(k_table, (vocab_size, branching), 0, vocab_size)
+
+    starts = jax.random.randint(k_start, (num_sequences,), 0, vocab_size)
+    choices = jax.random.randint(k_choice, (num_sequences, seq_len), 0, branching)
+    resets = jax.random.bernoulli(k_reset, 0.02, (num_sequences, seq_len))
+    reset_vals = jax.random.randint(k_resetv, (num_sequences, seq_len), 0,
+                                    vocab_size)
+
+    def step(tok, inp):
+        choice, reset, rv = inp
+        nxt = table[tok, choice]
+        nxt = jnp.where(reset, rv, nxt)
+        return nxt, nxt
+
+    def gen(s, ch, rs, rv):
+        _, seq = jax.lax.scan(step, s, (ch, rs, rv))
+        return jnp.concatenate([s[None], seq])
+
+    return jax.vmap(gen)(starts, choices, resets, reset_vals).astype(jnp.int32)

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: blockwise flash attention (causal / sliding-window /
+softcap, GQA-aware).
+
+TPU-native blocking (DESIGN.md §8): grid (B, H, Sq/bq, Skv/bk) with the KV
+dimension innermost ("arbitrary" semantics); online-softmax state (m, l, acc)
+lives in VMEM scratch across the KV sweep and the output block is written on
+the last KV step. Block shapes are MXU-aligned (multiples of 128 on the
+lane dim, 8 on sublanes). GQA is handled in the index_map (query head h reads
+KV head h // G) — no KV replication in HBM.
+
+The pure-jnp oracle is repro.kernels.ref.flash_attention_ref; the chunked
+model implementation (repro.models.attention) uses the same math.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               causal: bool, window: int, cap: float, bq: int, bk: int,
+               n_kv: int, skv: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+    d = q.shape[-1]
+
+    s = jax.lax.dot_general(q * (d ** -0.5), k,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+    if cap > 0.0:
+        s = cap * jnp.tanh(s / cap)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < skv                            # pad validity
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                           # (bq, 1)
+    m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=-1))[:, None]
+    p = jnp.exp(s - m_new)                        # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)                # (bq, 1)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)[:, None]
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "cap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    cap: float = 0.0, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q: (B, H, Sq, D); k, v: (B, KV, Skv, D). Returns (B, H, Sq, D)."""
+    B, H, Sq, D = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    sq_p = -(-Sq // bq) * bq
+    sk_p = -(-Skv // bk) * bk
+    if sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - Sq), (0, 0)))
+    if sk_p != Skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, sk_p - Skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, sk_p - Skv), (0, 0)))
+    n_kv = sk_p // bk
+
+    kernel = functools.partial(
+        _fa_kernel, causal=causal, window=window, cap=cap, bq=bq, bk=bk,
+        n_kv=n_kv, skv=Skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, sq_p // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, sq_p, D), q.dtype),
+        scratch_shapes=_vmem_scratch(bq, D),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]
+
+
+def _vmem_scratch(bq: int, d: int):
+    """VMEM scratch for the (m, l, acc) online-softmax state."""
+    from jax.experimental.pallas import tpu as pltpu
+    return [pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32)]

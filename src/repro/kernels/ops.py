@@ -1,0 +1,47 @@
+"""jit'd wrappers bridging model-layout tensors to the Pallas kernels.
+
+These are the public entry points:
+  * ``ota_aggregate_op``      — CWFL phase-1 MAC over flattened pytrees
+  * ``flash_attention_op``    — (B, S, H, D)-layout attention (model layout)
+
+On TPU hardware set ``interpret=False``; this container validates in
+interpret mode (kernel body executed in python on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _fa
+from repro.kernels.ota_aggregate import ota_aggregate as _ota
+from repro.utils import tree_flatten_vector, tree_unflatten_vector
+
+
+def ota_aggregate_op(stacked_params, weights, noise_key, noise_std,
+                     *, tile: int = 2048, interpret: bool = True):
+    """CWFL phase 1 over a K-stacked parameter pytree.
+
+    stacked_params: pytree with (K, ...) leaves; weights: (C, K);
+    returns a pytree with (C, ...) leaves (per-cluster aggregates).
+    """
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    C = weights.shape[0]
+    flat = jax.vmap(tree_flatten_vector)(stacked_params)     # (K, d)
+    noise = noise_std * jax.random.normal(noise_key, (C, flat.shape[1]),
+                                          flat.dtype)
+    agg = _ota(flat, weights.astype(flat.dtype), noise, tile=tile,
+               interpret=interpret)                          # (C, d)
+    template = jax.tree.map(lambda x: x[0], stacked_params)
+    return jax.vmap(lambda v: tree_unflatten_vector(v, template))(agg)
+
+
+def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
+                       cap: float = 0.0, block_q: int = 128,
+                       block_k: int = 128, interpret: bool = True):
+    """Model layout: q (B, S, H, D); k, v (B, S, KV, D) -> (B, S, H, D)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    o = _fa(qt, kt, vt, causal=causal, window=window, cap=cap,
+            block_q=block_q, block_k=block_k, interpret=interpret)
+    return jnp.swapaxes(o, 1, 2)

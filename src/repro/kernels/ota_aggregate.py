@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: fused OTA-MAC aggregation (CWFL phase 1).
+
+The per-round hot-spot of the paper: for every cluster c, the head receives
+    y_c = Σ_k W[c,k] · s_k + n_c            (eq. 7/8 after channel inversion)
+over the d-dimensional flattened parameter vector. Unfused, this is three
+HBM round-trips over (K, d) data (scale, reduce, add-noise); the kernel does
+one pass with a VMEM-resident (K, TILE) block per grid step.
+
+TPU-native design notes (DESIGN.md §8): the MAC superposition maps to an
+in-register reduction over the K (client) dim; tiles are (8·K, 128·n)-aligned
+for the VPU; the weights matrix (C, K) stays fully resident in VMEM (tiny).
+Validated in interpret mode against repro.kernels.ref.ota_aggregate_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE = 2048
+
+
+def _ota_kernel(w_ref, s_ref, n_ref, o_ref):
+    """Grid: (C, d // TILE). Blocks:
+    w: (1, K) weights row; s: (K, TILE) signals; n/o: (1, TILE)."""
+    w = w_ref[...].astype(jnp.float32)          # (1, K)
+    s = s_ref[...].astype(jnp.float32)          # (K, TILE)
+    n = n_ref[...].astype(jnp.float32)          # (1, TILE)
+    acc = jax.lax.dot_general(
+        w, s, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (1, TILE)
+    o_ref[...] = (acc + n).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def ota_aggregate(signals: jnp.ndarray, weights: jnp.ndarray,
+                  noise: jnp.ndarray, *, tile: int = DEFAULT_TILE,
+                  interpret: bool = True) -> jnp.ndarray:
+    """y = weights @ signals + noise, fused.
+
+    signals: (K, d); weights: (C, K); noise: (C, d). Returns (C, d).
+    d is padded to a multiple of ``tile`` internally.
+    """
+    K, d = signals.shape
+    C = weights.shape[0]
+    dp = -(-d // tile) * tile
+    if dp != d:
+        signals = jnp.pad(signals, ((0, 0), (0, dp - d)))
+        noise = jnp.pad(noise, ((0, 0), (0, dp - d)))
+
+    out = pl.pallas_call(
+        _ota_kernel,
+        grid=(C, dp // tile),
+        in_specs=[
+            pl.BlockSpec((1, K), lambda c, t: (c, 0)),
+            pl.BlockSpec((K, tile), lambda c, t: (0, t)),
+            pl.BlockSpec((1, tile), lambda c, t: (c, t)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda c, t: (c, t)),
+        out_shape=jax.ShapeDtypeStruct((C, dp), signals.dtype),
+        interpret=interpret,
+    )(weights, signals, noise)
+    return out[:, :d]

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ota_aggregate_ref(signals: jnp.ndarray, weights: jnp.ndarray,
+                      noise: jnp.ndarray) -> jnp.ndarray:
+    """Phase-1 OTA MAC for all clusters at once.
+
+    signals: (K, d) channel-inverted client parameter vectors.
+    weights: (C, K) per-(cluster, client) amplitudes (0 for non-members).
+    noise:   (C, d) receiver AWGN (pre-generated; the MAC adds it).
+    Returns: (C, d) received aggregates  y = W @ S + N.
+    """
+    return (weights.astype(jnp.float32) @ signals.astype(jnp.float32)
+            + noise.astype(jnp.float32)).astype(signals.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        cap: float = 0.0):
+    """Exact softmax attention. q: (B, H, Sq, D); k, v: (B, KV, Skv, D)."""
+    B, H, Sq, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qg = (q.astype(jnp.float32) * (D ** -0.5)).reshape(B, KV, G, Sq, D)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32))
+    if cap > 0.0:
+        s = cap * jnp.tanh(s / cap)
+    Skv = k.shape[2]
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows -> 0
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)

@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS before any jax initialization and then calls it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model).
+
+    Uses the first prod(shape) devices so a 512-device dry-run process can
+    build both meshes."""
+    import numpy as np
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — the dry-run must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax")
+    arr = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(arr, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests: 8 fake CPU devices)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def fsdp_axes(mesh) -> tuple:
+    """The axes used for fully-sharded parameter dims (pod joins FSDP)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,80 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from the JSON
+results produced by repro.launch.dryrun / repro.launch.roofline.
+
+    PYTHONPATH=src python -m repro.launch.report
+prints markdown to stdout (paste/refresh into EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+GIB = 2 ** 30
+
+
+def dryrun_table(path="results/dryrun.json") -> str:
+    if not Path(path).exists():
+        return "_dry-run results not yet generated_"
+    rows = json.loads(Path(path).read_text())
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    out = ["| arch | shape | mesh | status | peak GiB/dev | compile s | M | top collectives (per scan iter) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        mem = r.get("mem", {}).get("peak_per_device", 0) / GIB
+        colls = r.get("collectives", {})
+        top = ", ".join(
+            f"{k}×{v['count']} ({v['bytes']/GIB:.2f}G)"
+            for k, v in sorted(colls.items(),
+                               key=lambda kv: -kv[1]["bytes"])[:2])
+        status = r["status"]
+        if status == "skip":
+            top = r.get("reason", "")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {status} | "
+            f"{mem:.2f} | {r.get('compile_s', '')} | "
+            f"{r.get('microbatches', '')} | {top} |")
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_fail = sum(r["status"] == "fail" for r in rows)
+    n_skip = sum(r["status"] == "skip" for r in rows)
+    out.append(f"\n**{n_ok} ok / {n_skip} skip / {n_fail} fail** "
+               f"out of {len(rows)} (arch × shape × mesh) combinations.")
+    return "\n".join(out)
+
+
+def roofline_table(path="results/roofline.json") -> str:
+    if not Path(path).exists():
+        return "_roofline results not yet generated_"
+    rows = json.loads(Path(path).read_text())
+    rows.sort(key=lambda r: (r["arch"], r["shape"],
+                             r.get("variant", "base") != "base",
+                             r.get("variant", "base")))
+    out = ["| arch | shape | variant | compute s | memory s | collective s | dominant | MODEL_FLOPS | useful ratio | M |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        v = r.get("variant", "base")
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | {v} | — | — | — | "
+                       f"skip: {r.get('reason','')[:40]} | — | — | — |")
+            continue
+        if r["status"] == "fail":
+            out.append(f"| {r['arch']} | {r['shape']} | {v} | — | — | — | "
+                       f"FAIL | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {v} | "
+            f"{r['t_compute_s']*1e3:.1f}ms | "
+            f"{r['t_memory_s']*1e3:.1f}ms | {r['t_collective_s']*1e3:.1f}ms | "
+            f"**{r['dominant']}** | {r['model_flops']:.2e} | "
+            f"{r['useful_ratio']:.2f} | {r.get('microbatches','')} |")
+    return "\n".join(out)
+
+
+def main():
+    print("## §Dry-run\n")
+    print(dryrun_table())
+    print("\n## §Roofline\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,261 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline analysis (deliverable g): derive the three roofline terms for
+every (arch × input-shape) on the single-pod production mesh.
+
+Methodology (see EXPERIMENTS.md §Roofline):
+
+* XLA's HloCostAnalysis counts a while-loop body ONCE (scan trip counts are
+  invisible), and the CPU backend hides matmul flops inside oneDNN
+  custom-calls. We therefore measure UNROLLED lowerings (python-loop layers,
+  unrolled attention/SSM chunk loops) of 1-period and 2-period variants and
+  extrapolate linearly:
+      per_period = m(2) − m(1);   total = m(1) + (num_periods − 1)·per_period
+  `lowered.cost_analysis()` (pre-optimization, GLOBAL across devices) gives
+  flops and bytes; the compiled per-device HLO gives the collective traffic.
+* Collective traffic applies ring-algorithm factors: all-reduce 2×(n−1)/n,
+  all-gather/reduce-scatter (n−1)/n, all-to-all (n−1)/n, permute 1×.
+* sLSTM layers are an elementwise time-scan (cannot be unrolled at 32k) —
+  their flops are added analytically (noted per row).
+
+Terms (seconds, TPU v5e):
+  compute    = FLOPs_global / (chips · 197 TFLOP/s)
+  memory     = bytes_global / (chips · 819 GB/s)
+  collective = collective_bytes_per_device / 50 GB/s
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch.dryrun import (LONG_SKIP, LONG_SWA, SWA_WINDOW,
+                                 parse_collectives, prepare_cfg)
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import INPUT_SHAPES, InputShape
+from repro.models.transformer import count_active_params, count_params
+from repro.training import dist_steps as ds
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+LINK_BW = 50e9             # B/s / link
+CHIPS = 256
+
+RING_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _measure(arch: str, shape: InputShape, mesh, periods: int,
+             variant: str = "base") -> dict:
+    """Lower+compile an unrolled ``periods``-period variant; return global
+    flops/bytes and per-device weighted collective bytes."""
+    opts = set(variant.split("+"))
+    cfg = prepare_cfg(arch, shape, mesh, for_cost=True, variant=variant)
+    cfg = cfg.replace(num_layers=periods * len(cfg.pattern))
+
+    if shape.kind == "train":
+        # microbatches=1: the grad-accumulation scan hides (M−1)/M of the
+        # flops from cost analysis; the roofline is per full batch with a
+        # single accumulation (real M reported per row; per-microbatch grad
+        # reductions scale the collective term by ~M in deployment).
+        kw = {}
+        if "bf16accum" in opts:
+            kw["accum_dtype"] = jnp.bfloat16
+        if "cechunk" in opts:
+            kw["ce_mode"] = "resharded"
+        fn, args, shardings = ds.make_train_step(cfg, shape, mesh, plan=None,
+                                                 microbatches=1, **kw)
+        out_specs = None
+    elif shape.kind == "prefill":
+        fn, args, shardings, out_specs = ds.make_prefill_step(cfg, shape,
+                                                              mesh)
+    else:
+        ov = SWA_WINDOW if (shape.name == "long_500k" and arch in LONG_SWA) \
+            else None
+        fn, args, shardings = ds.make_decode_step(
+            cfg, shape, mesh, window_override=ov,
+            replicate_cache_heads="cacherep" in opts)
+        out_specs = None
+
+    with mesh:
+        kw = {"in_shardings": ds.sr.named(shardings, mesh)}
+        if out_specs is not None:
+            kw["out_shardings"] = ds.sr.named(out_specs, mesh)
+        lowered = jax.jit(fn, **kw).lower(*args)
+        ca = lowered.cost_analysis()           # GLOBAL flops (pre-partition)
+        compiled = lowered.compile()
+        colls = parse_collectives(compiled.as_text())
+    coll_bytes = sum(RING_FACTOR.get(k, 1.0) * v["bytes"]
+                     for k, v in colls.items())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "coll_bytes": float(coll_bytes),
+            "colls": colls,
+            "microbatches": (ds.auto_microbatches(cfg, shape, mesh)
+                             if shape.kind == "train" else 1)}
+
+
+def analytic_hbm_bytes(arch: str, shape: InputShape) -> float:
+    """Analytic per-device HBM traffic model (bytes). XLA-CPU's measured
+    'bytes accessed' reflects CPU fusion, not TPU HBM traffic, so the memory
+    term uses the standard napkin model:
+
+      params: read every pass (train: fwd+bwd+update r/w ≈ 4×; else 1×),
+      activations: ~12 (tokens_local × d) r/w per layer (×3 for train),
+      decode: + full KV-cache/state read per step.
+    """
+    cfg = get_config(arch)
+    n_params = count_params(cfg)
+    p_bytes = 2.0 * n_params / CHIPS           # bf16, fully sharded
+    passes = 4.0 if shape.kind == "train" else 1.0
+    tokens_local = (shape.global_batch * shape.seq_len
+                    if shape.kind != "decode" else shape.global_batch)
+    tokens_local /= min(CHIPS, 16)             # data-sharded (16-way)
+    act_mult = 3.0 if shape.kind == "train" else 1.0
+    act = 12.0 * cfg.num_layers * tokens_local * cfg.d_model * 2 * act_mult
+    act /= 16.0                                # activations model-sharded
+    cache = 0.0
+    if shape.kind == "decode":
+        # full cache read per decode step, sharded over 256 chips
+        per_layer = {"attn": 2 * shape.seq_len * cfg.num_kv_heads * cfg.hd,
+                     "mamba": cfg.d_inner * (cfg.ssm_state + cfg.ssm_conv),
+                     "mlstm": (2 * cfg.d_model / max(cfg.num_heads, 1)) ** 2
+                              * cfg.num_heads,
+                     "slstm": 4 * cfg.d_model}
+        for s in cfg.pattern:
+            w = per_layer.get(s.mixer, 0.0)
+            if s.mixer == "attn" and s.window:
+                w = 2 * min(shape.seq_len, s.window) * cfg.num_kv_heads * cfg.hd
+            cache += w * cfg.num_periods * shape.global_batch * 2
+        cache /= CHIPS
+    return p_bytes + act + cache
+
+
+def _slstm_flops(cfg, shape) -> float:
+    """Analytic flops of sLSTM layers (time-scan, invisible to unrolling)."""
+    n_slstm = sum(1 for s in cfg.pattern if s.mixer == "slstm")
+    n_slstm *= cfg.num_periods
+    if n_slstm == 0:
+        return 0.0
+    d = cfg.d_model
+    dh = d // cfg.num_heads
+    tokens = (shape.global_batch * shape.seq_len if shape.kind != "decode"
+              else shape.global_batch)
+    per_tok = 2 * 4 * d * dh + 40 * d      # 4 recurrent matvecs + gates
+    mult = 3.0 if shape.kind == "train" else 1.0   # fwd+bwd
+    return n_slstm * tokens * per_tok * mult
+
+
+def model_flops(arch: str, shape: InputShape) -> float:
+    cfg = get_config(arch)
+    n_active = count_active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch          # decode: 1 token
+
+
+def analyse(arch: str, shape_name: str, mesh, variant: str = "base") -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "variant": variant,
+           "status": "skip"}
+    if shape.name == "long_500k" and arch in LONG_SKIP:
+        rec["reason"] = LONG_SKIP[arch]
+        return rec
+    try:
+        t0 = time.time()
+        m1 = _measure(arch, shape, mesh, periods=1, variant=variant)
+        jax.clear_caches()
+        m2 = _measure(arch, shape, mesh, periods=2, variant=variant)
+        jax.clear_caches()
+        cfg = get_config(arch)
+        P = cfg.num_periods
+
+        def total(key):
+            per = m2[key] - m1[key]
+            return m1[key] + (P - 1) * per
+
+        flops = total("flops") + _slstm_flops(
+            prepare_cfg(arch, shape, mesh, for_cost=True), shape)
+        bytes_ = analytic_hbm_bytes(arch, shape)    # per-device (see docstring)
+        coll = total("coll_bytes")
+
+        t_compute = flops / (CHIPS * PEAK_FLOPS)
+        t_memory = bytes_ / HBM_BW
+        t_coll = coll / LINK_BW
+        terms = {"compute": t_compute, "memory": t_memory,
+                 "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        mf = model_flops(arch, shape)
+        rec.update({
+            "status": "ok",
+            "flops_global": flops,
+            "hbm_bytes_per_device": bytes_,
+            "coll_bytes_per_device": coll,
+            "collectives_1p": m1["colls"],
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_collective_s": t_coll,
+            "dominant": dominant,
+            "model_flops": mf,
+            "useful_ratio": mf / flops if flops else 0.0,
+            "microbatches": m1["microbatches"],
+            "measure_s": round(time.time() - t0, 1),
+        })
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"[:1500]
+        rec["traceback"] = traceback.format_exc()[-3000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--out", default="results/roofline.json")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_NAMES
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    mesh = make_production_mesh()
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = json.loads(out_path.read_text()) if out_path.exists() else []
+    done = {(r["arch"], r["shape"], r.get("variant", "base"))
+            for r in results if r["status"] in ("ok", "skip")}
+
+    for arch in archs:
+        for shape_name in shapes:
+            if (arch, shape_name, args.variant) in done:
+                continue
+            print(f"[roofline] {arch} × {shape_name} ({args.variant}) ...",
+                  flush=True)
+            rec = analyse(arch, shape_name, mesh, variant=args.variant)
+            if rec["status"] == "ok":
+                print(f"  -> {rec['dominant']}-bound  "
+                      f"c={rec['t_compute_s']*1e3:.1f}ms "
+                      f"m={rec['t_memory_s']*1e3:.1f}ms "
+                      f"n={rec['t_collective_s']*1e3:.1f}ms "
+                      f"useful={rec['useful_ratio']:.2f}", flush=True)
+            else:
+                print(f"  -> {rec['status']} {rec.get('error','')[:200]}",
+                      flush=True)
+            results = [r for r in results
+                       if (r["arch"], r["shape"], r.get("variant", "base"))
+                       != (arch, shape_name, args.variant)]
+            results.append(rec)
+            out_path.write_text(json.dumps(results, indent=1))
+
+
+if __name__ == "__main__":
+    main()

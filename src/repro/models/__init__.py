@@ -1,0 +1,6 @@
+from repro.models.small import (
+    make_mnist_mlp,
+    make_cifar_cnn,
+    nll_loss,
+    accuracy,
+)

@@ -1,0 +1,179 @@
+"""GQA attention: chunked-flash (online-softmax over KV blocks) + decode path.
+
+The chunked implementation never materializes the (Sq × Skv) score matrix —
+required for 32 k-token prefill on the production mesh (a full score tensor
+would be tens of GB per device). It is also the pure-jnp oracle for the
+Pallas `flash_attention` kernel (same blocking, see repro/kernels).
+
+Supports: causal masking, sliding windows (Gemma-2 local layers / 500 k
+serving variants), logit soft-capping, grouped KV heads, decode-with-cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import softcap as _softcap
+
+NEG_INF = -1e30
+
+
+def _block_scores(q, kb, cap):
+    """q: (B, Sq, KV, G, D), kb: (B, bk, KV, D) -> (B, Sq, KV, G, bk)."""
+    s = jnp.einsum("bqkgd,bskd->bqkgs", q.astype(jnp.float32),
+                   kb.astype(jnp.float32))
+    if cap > 0.0:
+        s = cap * jnp.tanh(s / cap)
+    return s
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    cap: float = 0.0, q_offset=0,
+                    kv_valid: Optional[jnp.ndarray] = None,
+                    block: int = 512, unroll: bool = False,
+                    return_stats: bool = False, gqa_repeat: bool = False):
+    """Online-softmax attention over KV blocks.
+
+    Args:
+      q: (B, Sq, H, D); k, v: (B, Skv, KV, D) with H = KV·G.
+      causal: mask k_pos > q_pos (+q_offset).
+      window: if >0, also mask k_pos ≤ q_pos − window (sliding window).
+      cap: attention logit softcap (Gemma-2).
+      q_offset: absolute position of q[0] (decode: current cache length).
+      kv_valid: optional (Skv,) or (B, Skv) boolean validity mask of the cache.
+      block: KV block size; unroll: python-loop the blocks (cost measurement).
+    Returns:
+      (B, Sq, H, D) in q.dtype.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    if gqa_repeat and G > 1:
+        # §Perf 'gqarep': expand KV heads to H up front instead of grouping
+        # q into (KV, G, D). The 5-D grouped layout splits a model-sharded
+        # head dim across (KV, G), which GSPMD can only reshard by full
+        # rematerialization (per-layer replication copies). Repeating K/V
+        # keeps the head dim intact (H divisible by the model axis for most
+        # archs) at the cost of G× larger K/V blocks in VMEM.
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        KV, G = H, 1
+    qg = (q * (D ** -0.5)).reshape(B, Sq, KV, G, D)
+
+    nb = -(-Skv // block)
+    pad = nb * block - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_valid is not None:
+            kv_valid = jnp.pad(kv_valid, [(0, 0)] * (kv_valid.ndim - 1) + [(0, pad)])
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def one_block(i, carry):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, i * block, block, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, i * block, block, axis=1)
+        s = _block_scores(qg, kb, cap)                     # (B,Sq,KV,G,bk)
+        k_pos = i * block + jnp.arange(block)
+        # Skv is the pre-pad key count: padded tail positions are invalid.
+        mask = k_pos[None, :] < Skv
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        mask_b = mask[None, :, None, None, :]              # (1,Sq,1,1,bk)
+        if kv_valid is not None:
+            kvb = jax.lax.dynamic_slice_in_dim(kv_valid, i * block, block,
+                                               axis=-1)
+            if kvb.ndim == 1:
+                kvb = kvb[None, None, None, None, :]
+            else:                                          # (B, bk)
+                kvb = kvb[:, None, None, None, :]
+            mask_b = mask_b & kvb
+        s = jnp.where(mask_b, s, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqkgs,bskd->bqkgd", p, vb.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, KV, G, D), jnp.float32)
+
+    if unroll:
+        carry = (m0, l0, acc0)
+        for i in range(nb):
+            carry = one_block(i, carry)
+        m, l, acc = carry
+    else:
+        m, l, acc = jax.lax.fori_loop(0, nb, one_block, (m0, l0, acc0))
+
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.reshape(B, Sq, H, D).astype(q.dtype)
+    if return_stats:
+        return out, m.reshape(B, Sq, H), l.reshape(B, Sq, H)
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0,
+                     cap: float = 0.0, block: int = 512,
+                     unroll: bool = False):
+    """One-token attention against a (possibly over-allocated) KV cache.
+
+    q: (B, 1, H, D); caches: (B, S_cache, KV, D); ``pos``: (scalar) number of
+    valid cache entries — the new token attends to cache[0:pos] (+ itself,
+    which the caller has already written at index pos−… by convention we
+    assume the caller wrote the new k/v at position pos, so valid = pos+1).
+    """
+    Skv = k_cache.shape[1]
+    valid = jnp.arange(Skv) <= pos
+    return flash_attention(q, k_cache, v_cache, causal=False, window=window,
+                           cap=cap, q_offset=pos, kv_valid=valid,
+                           block=block, unroll=unroll)
+
+
+def decode_attention_delta(q, k_cache, v_cache, k_new, v_new, pos, *,
+                           window: int = 0, cap: float = 0.0,
+                           kv_valid: Optional[jnp.ndarray] = None,
+                           block: int = 512, unroll: bool = False,
+                           gqa_repeat: bool = False):
+    """Paged-style decode: the cache is READ-ONLY (does not contain the new
+    token); the new token's K/V are merged analytically via online-softmax
+    statistics. This keeps the serve step's outputs O(1) in cache size — the
+    serving engine owns the cache writes (DESIGN.md §Perf).
+
+    q: (B, 1, H, D); caches: (B, S, KV, D); k_new/v_new: (B, 1, KV, D);
+    ``pos``: number of valid cache entries (cache[0:pos] attended).
+    """
+    B, _, H, D = q.shape
+    Skv = k_cache.shape[1]
+    KV = k_cache.shape[2]
+    G = H // KV
+    if kv_valid is None:
+        kv_valid = jnp.arange(Skv) < pos          # exclusive: new token separate
+    out_c, m_c, l_c = flash_attention(
+        q, k_cache, v_cache, causal=False, window=window, cap=cap,
+        q_offset=pos, kv_valid=kv_valid, block=block, unroll=unroll,
+        return_stats=True, gqa_repeat=gqa_repeat)
+    # self-attention score of the new token
+    qg = (q.astype(jnp.float32) * (D ** -0.5)).reshape(B, 1, KV, G, D)
+    s_new = jnp.einsum("bqkgd,bqkd->bqkg", qg,
+                       k_new.astype(jnp.float32))        # (B,1,KV,G)
+    if cap > 0.0:
+        s_new = cap * jnp.tanh(s_new / cap)
+    s_new = s_new.reshape(B, 1, H)
+    m_f = jnp.maximum(m_c, s_new)
+    corr_c = jnp.exp(m_c - m_f)
+    p_new = jnp.exp(s_new - m_f)
+    l_f = l_c * corr_c + p_new
+    v_rep = jnp.repeat(v_new.astype(jnp.float32), G, axis=2)  # (B,1,H,D)
+    num = (out_c.astype(jnp.float32) * (l_c * corr_c)[..., None]
+           + p_new[..., None] * v_rep)
+    return (num / jnp.maximum(l_f[..., None], 1e-30)).astype(q.dtype)

@@ -1,0 +1,63 @@
+"""Model input construction: concrete batches (smoke tests/examples) and
+ShapeDtypeStruct stand-ins (dry-run, no allocation).
+
+A *batch* is a dict:
+  tokens        (B, S_text) int32            — always present
+  labels        (B, S_text) int32            — train only
+  patch_embeds  (B, prefix, frontend_dim)    — vision_stub only
+  frames        (B, encoder_seq, frontend_dim) — audio_stub only
+
+For VLM archs the model prepends ``prefix_tokens`` projected patches, so
+S_text = seq_len − prefix_tokens keeps the total sequence at seq_len.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, InputShape
+
+
+def text_len(cfg: ArchConfig, seq_len: int) -> int:
+    if cfg.frontend == "vision_stub":
+        return max(seq_len - cfg.prefix_tokens, 1)
+    return seq_len
+
+
+def train_batch_specs(cfg: ArchConfig, shape: InputShape):
+    B, S = shape.global_batch, shape.seq_len
+    st = text_len(cfg, S)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, st), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, st), jnp.int32),
+    }
+    if cfg.frontend == "vision_stub":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.prefix_tokens, cfg.frontend_dim), cfg.cdtype)
+    if cfg.frontend == "audio_stub":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.frontend_dim), cfg.cdtype)
+    return specs
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: InputShape):
+    specs = train_batch_specs(cfg, shape)
+    specs.pop("labels")
+    return specs
+
+
+def make_batch(key, cfg: ArchConfig, seq_len: int, batch: int,
+               kind: str = "train"):
+    """Concrete random batch matching the specs above."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    st = text_len(cfg, seq_len)
+    out = {"tokens": jax.random.randint(k1, (batch, st), 0, cfg.vocab_size)}
+    if kind == "train":
+        out["labels"] = jax.random.randint(k2, (batch, st), 0, cfg.vocab_size)
+    if cfg.frontend == "vision_stub":
+        out["patch_embeds"] = jax.random.normal(
+            k3, (batch, cfg.prefix_tokens, cfg.frontend_dim), cfg.cdtype)
+    if cfg.frontend == "audio_stub":
+        out["frames"] = jax.random.normal(
+            k3, (batch, cfg.encoder_seq, cfg.frontend_dim), cfg.cdtype)
+    return out

@@ -1,0 +1,67 @@
+"""Shared neural layers: norms, RoPE, SwiGLU, embeddings, softcap."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in, d_out, dtype, scale: float | None = None):
+    s = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (s * jax.random.normal(key, (d_in, d_out), jnp.float32)).astype(dtype)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def norm(x, scale, kind: str):
+    return rmsnorm(x, scale) if kind == "rmsnorm" else layernorm(x, scale)
+
+
+def softcap(x, cap: float):
+    """Gemma-2 style logit soft-capping: cap · tanh(x / cap)."""
+    if cap <= 0.0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary position embedding. x: (..., S, H, D), positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]                       # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1).astype(dt)
+
+
+def swiglu_init(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params, x):
+    g = jax.nn.silu(x @ params["w_gate"])
+    h = g * (x @ params["w_up"])
+    return h @ params["w_down"]

@@ -1,0 +1,135 @@
+"""Token-choice top-k Mixture-of-Experts with sort-based capacity dispatch.
+
+Memory is O(T·k + E·cap·d) — NOT the O(T·E·cap) of one-hot dispatch einsums,
+which is intractable at 1 M tokens × 384 experts (kimi-k2). HLO FLOPs equal
+*active* expert compute (plus router), keeping the roofline's
+MODEL_FLOPS/HLO_FLOPs ratio honest.
+
+Dispatch: flatten (token, choice) pairs, argsort by expert id, compute each
+pair's rank within its expert group, drop ranks ≥ capacity, scatter into an
+(E, cap, d) buffer, run the expert SwiGLU as a batched einsum, gather back
+with router-probability combine weights.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def moe_init(key, d_model: int, d_ff: int, num_experts: int, dtype):
+    k_r, k_g, k_u, k_d = jax.random.split(key, 4)
+    e = num_experts
+    return {
+        "router": dense_init(k_r, d_model, e, jnp.float32),
+        "w_gate": (jax.random.normal(k_g, (e, d_model, d_ff), jnp.float32)
+                   / jnp.sqrt(d_model)).astype(dtype),
+        "w_up": (jax.random.normal(k_u, (e, d_model, d_ff), jnp.float32)
+                 / jnp.sqrt(d_model)).astype(dtype),
+        "w_down": (jax.random.normal(k_d, (e, d_ff, d_model), jnp.float32)
+                   / jnp.sqrt(d_ff)).astype(dtype),
+    }
+
+
+def _capacity(T: int, top_k: int, E: int, capacity_factor: float) -> int:
+    """Expected load × factor, floored at min(T, 16) so that tiny batches
+    (decode: T = B) are drop-free — a token loads an expert at most once,
+    so cap ≥ T guarantees no drops regardless of routing skew."""
+    return int(max(-(-T * top_k // E) * capacity_factor, min(T, 16), 1))
+
+
+def _dispatch_local(x, top_e, top_p, E: int, cap: int):
+    """Sort-based dispatch of ONE shard's tokens. x: (T, d); top_*: (T, k).
+    Returns (buf: (E, cap, d), st, dst_e, dst_c, keepw)."""
+    T, d = x.shape
+    top_k = top_e.shape[-1]
+    flat_e = top_e.reshape(-1)                                  # (T·k,)
+    flat_t = jnp.arange(T * top_k) // top_k                     # token ids
+    flat_p = top_p.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+    group_start = jnp.searchsorted(se, jnp.arange(E))           # (E,)
+    rank = jnp.arange(T * top_k) - group_start[se]
+    keep = rank < cap
+    dst_e = jnp.where(keep, se, E)                              # drop -> OOB
+    dst_c = jnp.where(keep, rank, 0)
+    buf = jnp.zeros((E + 1, cap, d), x.dtype)
+    buf = buf.at[dst_e, dst_c].set(x[st])
+    return buf[:E], st, dst_e, dst_c, (sp * keep)
+
+
+def moe_apply(params, x, *, top_k: int, capacity_factor: float = 1.25,
+              shards: int = 1, shard_axes=None):
+    """x: (T, d) -> (y: (T, d), aux: load-balance loss scalar).
+
+    ``shards``: dispatch locality factor — tokens are dispatched within
+    T/shards groups (mapped onto the mesh data axis by the caller's input
+    sharding). This keeps the argsort/rank bookkeeping *local to a shard*
+    (a global sort over a distributed (T·k,) array forces replication, which
+    is what makes one-big-sort MoE blow up at 1 M tokens × 384 experts);
+    the expert einsum over the (shards, E, cap, d) buffer then lowers to the
+    canonical all-to-all. Capacity is per-shard (cap_global/shards)."""
+    T, d = x.shape
+    E = params["router"].shape[-1]
+    if T % shards != 0:
+        shards = 1
+    Tl = T // shards
+
+    logits = x.astype(jnp.float32) @ params["router"]           # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, top_k)                  # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # Aux load-balance loss (Switch-style): E · Σ_e fraction_e · prob_e.
+    frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
+
+    cap = _capacity(Tl, top_k, E, capacity_factor)
+
+    # Explicit shardings (production mesh). The scheme mirrors production
+    # expert-parallel MoE: dispatch locally per data shard, all-to-all the
+    # slot buffers to EXPERT-sharded layout (E over data), run the expert
+    # matmuls TP-sharded on ff (matching the (E→data, d, ff→model) weight
+    # sharding so neither the forward nor the weight-grad einsum needs a
+    # full gather), all-to-all back. Without these constraints GSPMD fully
+    # replicates the O(T·k·d) buffers — 75+ GB/device at kimi-k2 scale.
+    if shard_axes is not None:
+        from jax.sharding import PartitionSpec as _P
+        batch_ax, model_ax = shard_axes
+        wsc = jax.lax.with_sharding_constraint
+        c_tok = lambda t: wsc(t, _P(batch_ax, None, None))
+        c_exp = lambda t: wsc(t, _P(batch_ax, None, None, None))
+        c_ff = lambda t: wsc(t, _P(batch_ax, None, None, model_ax))
+    else:
+        c_tok = c_exp = c_ff = lambda t: t
+
+    xs = c_tok(x.reshape(shards, Tl, d))
+    buf, st, dst_e, dst_c, keepw = jax.vmap(
+        lambda xl, te, tp: _dispatch_local(xl, te, tp, E, cap)
+    )(xs, top_e.reshape(shards, Tl, top_k), top_p.reshape(shards, Tl, top_k))
+
+    # all-to-all: (s→data, E, cap, d) -> (E→data, s, cap, d)
+    buf_t = c_exp(jnp.transpose(buf, (1, 0, 2, 3)))             # (E,s,cap,d)
+
+    # ---- expert SwiGLU (E expert-parallel, ff tensor-parallel) ---------
+    g = c_ff(jax.nn.silu(jnp.einsum("escd,edf->escf", buf_t,
+                                    params["w_gate"])))
+    u = c_ff(jnp.einsum("escd,edf->escf", buf_t, params["w_up"]))
+    h = c_exp(jnp.einsum("escf,efd->escd", g * u, params["w_down"]))
+    # reverse all-to-all: back to (s→data, E, cap, d)
+    h = jnp.transpose(h, (1, 0, 2, 3))
+    if shard_axes is not None:
+        from jax.sharding import PartitionSpec as _P
+        h = jax.lax.with_sharding_constraint(
+            h, _P(batch_ax, None, None, None))
+
+    # ---- combine (local to each shard) ----------------------------------
+    def combine_local(hl, st, dst_e, dst_c, keepw):
+        vals = hl[dst_e.clip(0, E - 1), dst_c]                  # (Tl·k, d)
+        w = keepw.astype(vals.dtype)[:, None]
+        return jnp.zeros((Tl, d), vals.dtype).at[st].add(vals * w)
+
+    y = c_tok(jax.vmap(combine_local)(h, st, dst_e, dst_c, keepw))
+    return y.reshape(T, d).astype(x.dtype), aux

@@ -1,0 +1,149 @@
+"""Mamba-style selective SSM (S6) with chunked parallel scan.
+
+Chunking rationale (DESIGN.md §4): a full-sequence associative scan would
+materialize (B, S, d_inner, d_state) discretized transition tensors — TB-scale
+at 32 k tokens. We scan sequentially over chunks (`lax.scan`, or a python loop
+in unroll/cost-measurement mode) and run `associative_scan` only inside a
+chunk, so transient memory is O(B · chunk · d_inner · d_state).
+
+Decode is the exact single-step recurrence on (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def mamba_init(key, d_model: int, d_inner: int, d_state: int, d_conv: int,
+               dt_rank: int, dtype):
+    ks = jax.random.split(key, 7)
+    # S4D-real initialization for A.
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner), jnp.float32)
+                   / jnp.sqrt(d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * d_state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner, dtype),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^{-1}(dt) for dt ~ U[1e-3, 0.1]
+            jax.random.uniform(ks[4], (d_inner,), jnp.float32,
+                               1e-3, 1e-1))).astype(jnp.float32),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[5], d_inner, d_model, dtype),
+    }
+
+
+def _ssm_coeffs(params, xz, d_state: int, dt_rank: int, valid=None):
+    """Per-token discretized coefficients from the post-conv activations.
+
+    xz: (B, L, d_inner) -> dA: (B, L, d_inner, N), dBu: same, C: (B, L, N).
+    ``valid``: optional (L,) bool — padded steps get identity transitions
+    (dA=1, dBu=0) so they cannot decay the carried state.
+    """
+    proj = xz @ params["x_proj"]                       # (B, L, r + 2N)
+    dt_raw = proj[..., :dt_rank]
+    Bc = proj[..., dt_rank:dt_rank + d_state].astype(jnp.float32)
+    Cc = proj[..., dt_rank + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (dt_raw @ params["dt_proj"]).astype(jnp.float32) + params["dt_bias"])
+    if valid is not None:
+        dt = dt * valid[None, :, None]
+    A = -jnp.exp(params["A_log"])                      # (d_inner, N)
+    dA = jnp.exp(dt[..., None] * A)                    # (B, L, d_inner, N)
+    dBu = (dt * xz.astype(jnp.float32))[..., None] * Bc[..., None, :]
+    return dA, dBu, Cc
+
+
+def selective_scan(params, xz, d_state: int, dt_rank: int, chunk: int,
+                   unroll: bool = False, h0=None):
+    """Chunked selective scan. xz: (B, L, d_inner) post-conv-activation.
+
+    Returns (y: (B, L, d_inner) float32, h_final: (B, d_inner, N)).
+    """
+    B, L, d_inner = xz.shape
+    nchunks = -(-L // chunk)
+    pad = nchunks * chunk - L
+    if pad:
+        xz = jnp.pad(xz, ((0, 0), (0, pad), (0, 0)))
+    if h0 is None:
+        h0 = jnp.zeros((B, d_inner, d_state), jnp.float32)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def run_chunk(h, args):
+        xc, vc = args
+        # xc: (B, chunk, d_inner); vc: (chunk,) validity
+        dA, dBu, Cc = _ssm_coeffs(params, xc, d_state, dt_rank, valid=vc)
+        A_cum, B_cum = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+        h_t = A_cum * h[:, None] + B_cum                # (B, c, d_inner, N)
+        y = jnp.einsum("bcdn,bcn->bcd", h_t, Cc)
+        y = y + params["D"] * xc.astype(jnp.float32)
+        return h_t[:, -1], y
+
+    xcs = xz.reshape(B, nchunks, chunk, d_inner)
+    valid = (jnp.arange(nchunks * chunk) < L).reshape(nchunks, chunk)
+    if unroll:
+        h, ys = h0, []
+        for i in range(nchunks):
+            h, y = run_chunk(h, (xcs[:, i], valid[i]))
+            ys.append(y)
+        y = jnp.concatenate(ys, axis=1)
+    else:
+        h, ys = jax.lax.scan(run_chunk, h0,
+                             (jnp.moveaxis(xcs, 1, 0), valid))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, nchunks * chunk, d_inner)
+    if pad:
+        y = y[:, :L]
+    return y, h
+
+
+def causal_conv(xz, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv over time. xz: (B, L, d_inner); kernel (K, d)."""
+    K = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xz.shape[0], K - 1, xz.shape[2]), xz.dtype)
+    else:
+        pad = conv_state.astype(xz.dtype)
+    xp = jnp.concatenate([pad, xz], axis=1)            # (B, L+K-1, d)
+    out = sum(xp[:, i:i + xz.shape[1]] * conv_w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return out + conv_b, new_state
+
+
+def mamba_apply(params, x, cfg, cache=None, unroll: bool = False):
+    """Full Mamba block mixer. x: (B, L, d_model).
+
+    cache: None (train/prefill from scratch) or dict(conv, h) for decode.
+    Returns (y: (B, L, d_model), new_cache).
+    """
+    d_inner = cfg.d_inner
+    xz_in = x @ params["in_proj"]                      # (B, L, 2*d_inner)
+    xin, z = xz_in[..., :d_inner], xz_in[..., d_inner:]
+    conv_state = None if cache is None else cache["conv"]
+    xc, new_conv = causal_conv(xin, params["conv_w"], params["conv_b"],
+                               conv_state)
+    xc = jax.nn.silu(xc)
+    h0 = None if cache is None else cache["h"]
+    y, h = selective_scan(params, xc, cfg.ssm_state, cfg.dt_rank,
+                          cfg.ssm_chunk, unroll=unroll, h0=h0)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return out, {"conv": new_conv, "h": h}
+
+
+def mamba_cache_spec(cfg, batch: int):
+    """ShapeDtypeStructs of the decode cache (for input_specs)."""
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, cfg.d_inner),
+                                     cfg.cdtype),
+        "h": jax.ShapeDtypeStruct((batch, cfg.d_inner, cfg.ssm_state),
+                                  jnp.float32),
+    }

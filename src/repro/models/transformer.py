@@ -1,0 +1,482 @@
+"""Model assembly: pattern-cycled blocks, scan-over-layers, enc-dec & VLM.
+
+Layout: ``cfg.pattern`` is a tuple of LayerSpecs cycled ``num_periods`` times.
+Parameters for pattern position i are stacked over periods:
+``params["layers"][f"b{i}"]`` has leaves of shape (num_periods, ...) and the
+period dimension is scanned (HLO size independent of depth). Python-loop mode
+(`scan_layers=False`) unrolls for the roofline cost measurement.
+
+Entry points (all pure):
+  init_params(key, cfg)
+  forward(params, batch, cfg)            -> (logits, aux)        [train]
+  prefill(params, batch, cfg)            -> (last_logits, caches)
+  decode_step(params, token, caches, pos, cfg) -> (logits, caches)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (decode_attention, decode_attention_delta,
+                                    flash_attention)
+from repro.models.config import ArchConfig, LayerSpec
+from repro.models.layers import dense_init, norm, rope, softcap, swiglu, swiglu_init
+from repro.models.moe import moe_apply, moe_init
+from repro.models.ssm import mamba_apply, mamba_cache_spec, mamba_init
+from repro.models.xlstm import (mlstm_apply, mlstm_cache_spec, mlstm_init,
+                                slstm_apply, slstm_cache_spec, slstm_init)
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-module.
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ArchConfig, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, cfg.pdtype),
+        "wk": dense_init(ks[1], d, KV * hd, cfg.pdtype),
+        "wv": dense_init(ks[2], d, KV * hd, cfg.pdtype),
+        "wo": dense_init(ks[3], H * hd, d, cfg.pdtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H * hd,), cfg.pdtype)
+        p["bk"] = jnp.zeros((KV * hd,), cfg.pdtype)
+        p["bv"] = jnp.zeros((KV * hd,), cfg.pdtype)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _qkv(p, x, cfg, positions, use_rope=True):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if "q_norm" in p:
+        from repro.models.layers import rmsnorm
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if use_rope and positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def self_attn_apply(p, x, cfg: ArchConfig, spec: LayerSpec, *,
+                    positions, cache=None, causal=True, return_cache=False):
+    """Self-attention. train: cache=None; prefill: return_cache=True;
+    decode: cache = {k, v} with scalar ``pos`` handled by the caller via
+    positions (= filled with pos) and cache writes."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    if cache is None:
+        o = flash_attention(q, k, v, causal=causal, window=spec.window,
+                            cap=cfg.softcap_attn, block=cfg.attn_chunk,
+                            unroll=cfg.unroll_loops,
+                            gqa_repeat=cfg.attn_gqa_repeat)
+        new_cache = {"k": k, "v": v} if return_cache else None
+    else:
+        # Paged-style decode (DESIGN.md §Perf): the cache is READ-ONLY and
+        # does NOT contain the current token; its K/V are merged analytically
+        # and returned as a delta for the serving engine to write. This keeps
+        # the serve step's outputs O(1) in cache size (a full-cache output
+        # contract costs 2-3x the cache in scan/copy buffers).
+        pos = positions[0, 0]                      # scalar current position
+        W = cache["k"].shape[1]
+        if spec.window > 0 and W <= spec.window:
+            # ring buffer holding the last W positions (excluding current);
+            # the slot the engine will overwrite (pos % W = position pos−W)
+            # is already outside the window.
+            idx = jnp.arange(W)
+            valid = (idx < pos) & (idx != pos % W)
+            o = decode_attention_delta(
+                q, cache["k"], cache["v"], k, v, pos, window=0,
+                kv_valid=valid, cap=cfg.softcap_attn, block=cfg.attn_chunk,
+                unroll=cfg.unroll_loops, gqa_repeat=cfg.attn_gqa_repeat)
+        else:
+            o = decode_attention_delta(
+                q, cache["k"], cache["v"], k, v, pos, window=spec.window,
+                cap=cfg.softcap_attn, block=cfg.attn_chunk,
+                unroll=cfg.unroll_loops, gqa_repeat=cfg.attn_gqa_repeat)
+        new_cache = {"k_new": k.astype(cache["k"].dtype),
+                     "v_new": v.astype(cache["v"].dtype)}
+    o = o.reshape(B, S, cfg.num_heads * cfg.hd)
+    return o @ p["wo"], new_cache
+
+
+def cross_attn_apply(p, x, cfg: ArchConfig, enc_kv):
+    """Cross-attention to precomputed encoder K/V (whisper decoder)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    o = flash_attention(q, enc_kv["k"], enc_kv["v"], causal=False,
+                        cap=0.0, block=cfg.attn_chunk,
+                        unroll=cfg.unroll_loops)
+    return o.reshape(B, S, H * hd) @ p["wo"]
+
+
+def encoder_kv(p, enc_out, cfg):
+    """Precompute cross-attention K/V from encoder output (B, T, d)."""
+    B, T, _ = enc_out.shape
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    return {"k": (enc_out @ p["wk"]).reshape(B, T, KV, hd),
+            "v": (enc_out @ p["wv"]).reshape(B, T, KV, hd)}
+
+
+# ---------------------------------------------------------------------------
+# Block = norm + mixer (+ cross-attn) (+ norm + ffn), all pre-norm residual.
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ArchConfig, spec: LayerSpec, cross: bool = False):
+    ks = jax.random.split(key, 5)
+    d = cfg.d_model
+    p: dict[str, Any] = {"ln1": jnp.zeros((d,), jnp.float32)}
+    if spec.mixer == "attn":
+        p["attn"] = attn_init(ks[0], cfg)
+    elif spec.mixer == "mamba":
+        p["mamba"] = mamba_init(ks[0], d, cfg.d_inner, cfg.ssm_state,
+                                cfg.ssm_conv, cfg.dt_rank, cfg.pdtype)
+    elif spec.mixer == "mlstm":
+        p["mlstm"] = mlstm_init(ks[0], d, cfg.num_heads, cfg.pdtype)
+    elif spec.mixer == "slstm":
+        p["slstm"] = slstm_init(ks[0], d, cfg.num_heads, cfg.pdtype)
+    else:
+        raise ValueError(f"unknown mixer {spec.mixer}")
+    if cross:
+        p["ln_x"] = jnp.zeros((d,), jnp.float32)
+        p["xattn"] = attn_init(ks[1], cfg, cross=True)
+    if spec.ffn == "dense":
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        p["ffn"] = swiglu_init(ks[2], d, cfg.d_ff, cfg.pdtype)
+    elif spec.ffn == "moe":
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        p["moe"] = moe_init(ks[2], d, cfg.d_ff_expert, cfg.num_experts,
+                            cfg.pdtype)
+    return p
+
+
+def block_cache_spec(cfg: ArchConfig, spec: LayerSpec, batch: int,
+                     cache_len: int):
+    """ShapeDtypeStruct pytree of this block's decode cache."""
+    if spec.mixer == "attn":
+        W = min(cache_len, spec.window) if spec.window > 0 else cache_len
+        kv = jax.ShapeDtypeStruct((batch, W, cfg.num_kv_heads, cfg.hd),
+                                  cfg.cdtype)
+        return {"k": kv, "v": kv}
+    if spec.mixer == "mamba":
+        return mamba_cache_spec(cfg, batch)
+    if spec.mixer == "mlstm":
+        return mlstm_cache_spec(cfg, batch)
+    if spec.mixer == "slstm":
+        return slstm_cache_spec(cfg, batch)
+    raise ValueError(spec.mixer)
+
+
+def block_apply(p, x, cfg: ArchConfig, spec: LayerSpec, *, positions,
+                cache=None, enc_kv=None, return_cache=False):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = norm(x, p["ln1"], cfg.norm)
+    if spec.mixer == "attn":
+        mixer_cache = None if cache is None else cache["mixer"]
+        y, new_mixer = self_attn_apply(p["attn"], h, cfg, spec,
+                                       positions=positions, cache=mixer_cache,
+                                       return_cache=return_cache)
+    elif spec.mixer == "mamba":
+        y, new_mixer = mamba_apply(p["mamba"], h, cfg,
+                                   None if cache is None else cache["mixer"],
+                                   unroll=cfg.unroll_loops)
+        if not return_cache and cache is None:
+            new_mixer = None
+    elif spec.mixer == "mlstm":
+        y, new_mixer = mlstm_apply(p["mlstm"], h, cfg,
+                                   None if cache is None else cache["mixer"],
+                                   unroll=cfg.unroll_loops)
+        if not return_cache and cache is None:
+            new_mixer = None
+    else:  # slstm
+        y, new_mixer = slstm_apply(p["slstm"], h, cfg,
+                                   None if cache is None else cache["mixer"])
+        if not return_cache and cache is None:
+            new_mixer = None
+    x = x + y
+
+    if enc_kv is not None and "xattn" in p:
+        h = norm(x, p["ln_x"], cfg.norm)
+        x = x + cross_attn_apply(p["xattn"], h, cfg, enc_kv)
+
+    if spec.ffn == "dense":
+        h = norm(x, p["ln2"], cfg.norm)
+        x = x + swiglu(p["ffn"], h)
+    elif spec.ffn == "moe":
+        h = norm(x, p["ln2"], cfg.norm)
+        B, S, d = h.shape
+        shard_axes = None
+        if cfg.act_spec is not None and cfg.moe_shards > 1:
+            shard_axes = (cfg.act_spec[0], cfg.act_spec[-1])
+        y, aux = moe_apply(p["moe"], h.reshape(B * S, d), top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor,
+                           shards=cfg.moe_shards, shard_axes=shard_axes)
+        x = x + y.reshape(B, S, d)
+
+    new_cache = None
+    if new_mixer is not None:
+        new_cache = {"mixer": new_mixer}
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Layer stack: scan over periods (or python loop in unroll mode).
+# ---------------------------------------------------------------------------
+
+def stack_init(key, cfg: ArchConfig, cross: bool = False):
+    period = len(cfg.pattern)
+    out = {}
+    for i, spec in enumerate(cfg.pattern):
+        keys = jax.random.split(jax.random.fold_in(key, i), cfg.num_periods)
+        out[f"b{i}"] = jax.vmap(
+            lambda k: block_init(k, cfg, spec, cross=cross))(keys)
+    return out
+
+
+def stack_apply(layers, x, cfg: ArchConfig, *, positions, caches=None,
+                enc_kv=None, return_cache=False, cross: bool = False):
+    """Apply all layers. caches: pytree with leading period axis per b{i}.
+
+    Returns (x, new_caches, aux_total).
+    """
+    period = len(cfg.pattern)
+
+    def one_period(x, period_params, period_caches):
+        if cfg.act_spec is not None:
+            from jax.sharding import PartitionSpec as _P
+            x = jax.lax.with_sharding_constraint(x, _P(*cfg.act_spec))
+        aux_sum = jnp.zeros((), jnp.float32)
+        new_caches = {}
+        for i, spec in enumerate(cfg.pattern):
+            c = None if period_caches is None else period_caches[f"b{i}"]
+            x, nc, aux = block_apply(
+                period_params[f"b{i}"], x, cfg, spec, positions=positions,
+                cache=c, enc_kv=enc_kv, return_cache=return_cache)
+            aux_sum = aux_sum + aux
+            if nc is not None:
+                new_caches[f"b{i}"] = nc
+        return x, (new_caches if new_caches else None), aux_sum
+
+    if cfg.remat:
+        one_period = jax.checkpoint(one_period)
+
+    if cfg.scan_layers and cfg.num_periods > 1:
+        def body(carry, xs):
+            x, aux = carry
+            pp, pc = xs
+            x, nc, aux_p = one_period(x, pp, pc)
+            return (x, aux + aux_p), nc
+
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (layers, caches))
+        return x, new_caches, aux
+    else:
+        aux_total = jnp.zeros((), jnp.float32)
+        all_new = []
+        for pidx in range(cfg.num_periods):
+            pp = jax.tree.map(lambda a: a[pidx], layers)
+            pc = (None if caches is None
+                  else jax.tree.map(lambda a: a[pidx], caches))
+            x, nc, aux_p = one_period(x, pp, pc)
+            aux_total = aux_total + aux_p
+            all_new.append(nc)
+        new_caches = None
+        if all_new and all_new[0] is not None:
+            new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *all_new)
+        return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Full model.
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab_size, d), jnp.float32)
+                  * (d ** -0.5)).astype(cfg.pdtype),
+        "layers": stack_init(ks[1], cfg, cross=cfg.encoder_layers > 0),
+        "final_norm": jnp.zeros((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], d, cfg.vocab_size, cfg.pdtype)
+    if cfg.frontend == "vision_stub":
+        params["projector"] = {
+            "w1": dense_init(ks[3], cfg.frontend_dim, d, cfg.pdtype),
+            "w2": dense_init(ks[4], d, d, cfg.pdtype),
+        }
+    if cfg.frontend == "audio_stub":
+        enc_cfg = cfg.replace(num_layers=cfg.encoder_layers,
+                              pattern=(LayerSpec("attn", 0, "dense"),))
+        params["encoder"] = {
+            "in_proj": dense_init(ks[3], cfg.frontend_dim, d, cfg.pdtype),
+            "layers": stack_init(ks[5], enc_cfg),
+            "final_norm": jnp.zeros((d,), jnp.float32),
+        }
+    return params
+
+
+def _frontend_prefix(params, batch, cfg):
+    """VLM: project patch embeddings into d_model prefix tokens."""
+    pe = batch["patch_embeds"]
+    h = jax.nn.gelu(pe.astype(cfg.cdtype) @ params["projector"]["w1"])
+    return h @ params["projector"]["w2"]
+
+
+def _encode_audio(params, batch, cfg):
+    """Whisper encoder over stub frame embeddings (B, T_enc, frontend_dim)."""
+    enc = params["encoder"]
+    frames = batch["frames"].astype(cfg.cdtype)
+    h = frames @ enc["in_proj"]
+    T = h.shape[1]
+    pos = jnp.arange(T)[None, :]
+    enc_cfg = cfg.replace(num_layers=cfg.encoder_layers,
+                          pattern=(LayerSpec("attn", 0, "dense"),))
+    # Non-causal full attention encoder.
+    def enc_block(p, x):
+        x, _, _ = block_apply(p, x, enc_cfg, enc_cfg.pattern[0],
+                              positions=pos)
+        return x
+    # note: encoder self-attn must be bidirectional -> custom path
+    h2 = h
+    layers = enc["layers"]
+    for pidx in range(enc_cfg.num_periods):
+        pp = jax.tree.map(lambda a: a[pidx], layers)["b0"]
+        hh = norm(h2, pp["ln1"], cfg.norm)
+        y, _ = self_attn_apply(pp["attn"], hh, enc_cfg, enc_cfg.pattern[0],
+                               positions=pos, causal=False)
+        h2 = h2 + y
+        hh = norm(h2, pp["ln2"], cfg.norm)
+        h2 = h2 + swiglu(pp["ffn"], hh)
+    return norm(h2, enc["final_norm"], cfg.norm)
+
+
+def _embed_tokens(params, tokens, cfg):
+    return params["embed"].astype(cfg.cdtype)[tokens]
+
+
+def _lm_logits(params, x, cfg):
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.cdtype)
+    logits = x @ head
+    return softcap(logits, cfg.softcap_final)
+
+
+def _assemble_inputs(params, batch, cfg):
+    """Token embeddings (+ VLM prefix), encoder output if any."""
+    x = _embed_tokens(params, batch["tokens"], cfg)
+    enc_kv_src = None
+    if cfg.frontend == "vision_stub":
+        prefix = _frontend_prefix(params, batch, cfg)
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    if cfg.frontend == "audio_stub":
+        enc_kv_src = _encode_audio(params, batch, cfg)
+    return x, enc_kv_src
+
+
+def _first_cross_params(params, cfg):
+    """Cross-attn K/V projections live in each decoder block; encoder K/V are
+    computed per block inside stack (kv differ per layer). For simplicity and
+    compile-size we compute enc K/V once from block b0's projections and share
+    them across layers (weight-shared cross-attention)."""
+    b0 = jax.tree.map(lambda a: a[0], params["layers"]["b0"])
+    return b0["xattn"]
+
+
+def forward(params, batch, cfg: ArchConfig):
+    """Training forward: full-sequence logits. Returns (logits, aux)."""
+    x, enc_out = _assemble_inputs(params, batch, cfg)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    enc_kv = None
+    if enc_out is not None:
+        enc_kv = encoder_kv(_first_cross_params(params, cfg), enc_out, cfg)
+    x, _, aux = stack_apply(params["layers"], x, cfg, positions=positions,
+                            enc_kv=enc_kv)
+    x = norm(x, params["final_norm"], cfg.norm)
+    return _lm_logits(params, x, cfg), aux
+
+
+def prefill(params, batch, cfg: ArchConfig):
+    """Prefill: forward over the prompt, returning last-position logits and
+    the full decode cache."""
+    x, enc_out = _assemble_inputs(params, batch, cfg)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    enc_kv = None
+    if enc_out is not None:
+        enc_kv = encoder_kv(_first_cross_params(params, cfg), enc_out, cfg)
+    x, caches, aux = stack_apply(params["layers"], x, cfg,
+                                 positions=positions, enc_kv=enc_kv,
+                                 return_cache=True)
+    x = norm(x, params["final_norm"], cfg.norm)
+    logits = _lm_logits(params, x[:, -1:], cfg)
+    return logits, caches
+
+
+def decode_step(params, token, caches, pos, cfg: ArchConfig, enc_kv=None):
+    """One decode step. token: (B, 1) int32; pos: scalar int32 (current
+    write position = number of tokens already in the cache)."""
+    x = _embed_tokens(params, token, cfg)
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    x, new_caches, _ = stack_apply(params["layers"], x, cfg,
+                                   positions=positions, caches=caches,
+                                   enc_kv=enc_kv, return_cache=True)
+    x = norm(x, params["final_norm"], cfg.norm)
+    return _lm_logits(params, x, cfg), new_caches
+
+
+def decode_cache_specs(cfg: ArchConfig, batch: int, cache_len: int):
+    """Stacked ShapeDtypeStruct cache pytree for the dry-run serve step."""
+    out = {}
+    for i, spec in enumerate(cfg.pattern):
+        one = block_cache_spec(cfg, spec, batch, cache_len)
+        out[f"b{i}"] = {"mixer": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.num_periods,) + s.shape,
+                                           s.dtype), one)}
+    return out
+
+
+def count_params(cfg: ArchConfig) -> int:
+    """Analytic parameter count (no allocation)."""
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    import numpy as np
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes)))
+
+
+def count_active_params(cfg: ArchConfig) -> int:
+    """Active params per token (MoE: top_k of num_experts experts)."""
+    total = count_params(cfg)
+    if cfg.num_experts == 0:
+        return total
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    import numpy as np
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if any(k in ("w_gate", "w_up", "w_down") for k in keys) and \
+           any(k == "moe" for k in keys):
+            expert += int(np.prod(leaf.shape))
+    active_expert = expert * cfg.top_k // max(cfg.num_experts, 1)
+    return total - expert + active_expert

@@ -1,0 +1,280 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunkwise-parallel) and sLSTM
+(scalar-memory, strictly sequential) — arXiv:2405.04517.
+
+mLSTM recurrence (stabilized; stored state C̃ = C/exp(m)):
+    m_t = max(logσ(f̃_t) + m_{t−1}, ĩ_t)
+    C̃_t = exp(logσ(f̃_t)+m_{t−1}−m_t)·C̃_{t−1} + exp(ĩ_t−m_t)·k_t v_tᵀ
+    ñ_t = … (same, with k_t)
+    h_t = C̃_tᵀ q_t / max(|ñ_tᵀ q_t|, exp(−m_t))
+
+The chunkwise form computes, inside a chunk with carry (C̃₀, ñ₀, m₀):
+    F_t = Σ_{s≤t} logσ(f̃_s),  a_s = ĩ_s − F_s,
+    g_t = max(m₀, max_{s≤t} a_s),  m_t = F_t + g_t,
+    intra weight w_{ts} = exp(a_s − g_t)·[s ≤ t],  inter scale exp(m₀ − g_t),
+which is exactly the recurrence unrolled (validated against it in tests).
+Chunk loop is `lax.scan` (or python in unroll/cost mode); intra-chunk work is
+dense (c×c) matmuls — MXU-friendly on TPU.
+
+sLSTM has per-head recurrent weights R·h_{t−1} in every gate, so it cannot be
+parallelized over time; it is an elementwise `lax.scan` (cheap: O(S·d·dh)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d_model: int, num_heads: int, dtype, proj_factor: int = 2):
+    d_up = proj_factor * d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": dense_init(ks[0], d_model, 2 * d_up, dtype),
+        "conv_w": (jax.random.normal(ks[1], (4, d_up), jnp.float32) / 2.0
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((d_up,), dtype),
+        "wq": dense_init(ks[2], d_up, d_up, dtype),
+        "wk": dense_init(ks[3], d_up, d_up, dtype),
+        "wv": dense_init(ks[4], d_up, d_up, dtype),
+        "w_gates": dense_init(ks[5], d_up, 2 * num_heads, jnp.float32),
+        "b_gates": jnp.concatenate([
+            jnp.zeros((num_heads,), jnp.float32),          # input gate bias
+            3.0 + jnp.arange(num_heads, dtype=jnp.float32)  # forget-gate bias
+        ]),
+        "head_norm": jnp.zeros((d_up,), jnp.float32),
+        "down_proj": dense_init(ks[6], d_up, d_model, dtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, i_raw, lf, carry):
+    """One chunk. q,k,v: (B,c,nh,dh); i_raw,lf: (B,c,nh);
+    carry = (C: (B,nh,dk,dv), n: (B,nh,dk), m: (B,nh))."""
+    C0, n0, m0 = carry
+    F = jnp.cumsum(lf, axis=1)                              # (B,c,nh)
+    a = i_raw - F
+    g = jnp.maximum(m0[:, None], jax.lax.cummax(a, axis=1))  # (B,c,nh)
+    m_t = F + g
+
+    # intra-chunk: w[t,s] = exp(a_s − g_t) for s ≤ t.
+    w = jnp.exp(a[:, None, :, :] - g[:, :, None, :])        # (B,t,s,nh)
+    c = w.shape[1]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    w = jnp.where(tri[None, :, :, None], w, 0.0)
+    qk = jnp.einsum("bthd,bshd->btsh", q, k)                # (B,t,s,nh)
+    num = jnp.einsum("btsh,bshd->bthd", qk * w, v)
+    den = jnp.einsum("btsh,btsh->bth", qk, w)
+
+    inter = jnp.exp(m0[:, None] - g)                        # (B,c,nh)
+    num = num + inter[..., None] * jnp.einsum("bthd,bhde->bthe", q, C0)
+    den = den + inter * jnp.einsum("bthd,bhd->bth", q, n0)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+    # chunk-end state
+    g_end = g[:, -1]                                        # (B,nh)
+    m_end = F[:, -1] + g_end
+    wk = jnp.exp(a - g_end[:, None])                        # (B,c,nh)
+    decay = jnp.exp(m0 - g_end)
+    C1 = decay[:, :, None, None] * C0 + jnp.einsum("bshd,bsh,bshe->bhde",
+                                                   k, wk, v)
+    n1 = decay[:, :, None] * n0 + jnp.einsum("bshd,bsh->bhd", k, wk)
+    return h, (C1, n1, m_end)
+
+
+def mlstm_cell(q, k, v, i_raw, f_raw, chunk: int, unroll: bool = False,
+               state=None):
+    """q,k,v: (B,S,nh,dh); gates (B,S,nh). Returns (h, state)."""
+    B, S, nh, dh = q.shape
+    q = q * (dh ** -0.5)
+    nchunks = -(-S // chunk)
+    pad = nchunks * chunk - S
+    if pad:
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)   # no input contribution
+        f_raw = jnp.pad(f_raw, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=1e3)     # forget gate ≈ 1
+    lf = jax.nn.log_sigmoid(f_raw)
+    if state is None:
+        state = (jnp.zeros((B, nh, dh, dh), jnp.float32),
+                 jnp.zeros((B, nh, dh), jnp.float32),
+                 jnp.full((B, nh), -1e30, jnp.float32))
+
+    split = lambda x: jnp.moveaxis(
+        x.reshape(B, nchunks, chunk, *x.shape[2:]), 1, 0)
+    qs, ks_, vs, is_, lfs = map(split, (q.astype(jnp.float32),
+                                        k.astype(jnp.float32),
+                                        v.astype(jnp.float32), i_raw, lf))
+    if unroll:
+        hs = []
+        for i in range(nchunks):
+            h, state = _mlstm_chunk(qs[i], ks_[i], vs[i], is_[i], lfs[i], state)
+            hs.append(h)
+        h = jnp.concatenate(hs, axis=1)
+    else:
+        state, hs = jax.lax.scan(
+            lambda st, args: tuple(reversed(_mlstm_chunk(*args, st))),
+            state, (qs, ks_, vs, is_, lfs))
+        h = jnp.moveaxis(hs, 0, 1).reshape(B, nchunks * chunk, nh, dh)
+    if pad:
+        h = h[:, :S]
+    return h, state
+
+
+def mlstm_step(q, k, v, i_raw, f_raw, state):
+    """Exact single-token recurrence (decode + test oracle).
+    q,k,v: (B,nh,dh); gates (B,nh); state as in mlstm_cell."""
+    C, n, m = state
+    dh = q.shape[-1]
+    q = q.astype(jnp.float32) * (dh ** -0.5)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(lf + m, i_raw)
+    f_eff = jnp.exp(lf + m - m_new)
+    i_eff = jnp.exp(i_raw - m_new)
+    C = f_eff[..., None, None] * C + i_eff[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = f_eff[..., None] * n + i_eff[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.einsum("bhd,bhd->bh", q, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h, (C, n, m_new)
+
+
+def mlstm_apply(params, x, cfg, cache=None, unroll: bool = False):
+    """Full mLSTM block mixer. x: (B, S, d_model)."""
+    from repro.models.ssm import causal_conv  # shared depthwise conv
+    B, S, _ = x.shape
+    nh = cfg.num_heads
+    up = x @ params["up_proj"]
+    d_up = up.shape[-1] // 2
+    xm, z = up[..., :d_up], up[..., d_up:]
+    conv_state = None if cache is None else cache["conv"]
+    xc, new_conv = causal_conv(xm, params["conv_w"], params["conv_b"],
+                               conv_state)
+    xc = jax.nn.silu(xc)
+    dh = d_up // nh
+    shp = (B, S, nh, dh)
+    q = (xc @ params["wq"]).reshape(shp)
+    k = (xc @ params["wk"]).reshape(shp)
+    v = (xm @ params["wv"]).reshape(shp)
+    gates = xc.astype(jnp.float32) @ params["w_gates"] + params["b_gates"]
+    i_raw = gates[..., :nh]
+    f_raw = gates[..., nh:]
+
+    if cache is None:
+        h, state = mlstm_cell(q, k, v, i_raw, f_raw, cfg.mlstm_chunk,
+                              unroll=unroll)
+    else:
+        state = (cache["C"], cache["n"], cache["m"])
+        if S == 1:
+            h1, state = mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                   i_raw[:, 0], f_raw[:, 0], state)
+            h = h1[:, None]
+        else:
+            h, state = mlstm_cell(q, k, v, i_raw, f_raw, cfg.mlstm_chunk,
+                                  unroll=unroll, state=state)
+
+    h = h.reshape(B, S, d_up).astype(x.dtype)
+    h = rmsnorm(h.reshape(B, S, nh, dh),
+                params["head_norm"].reshape(nh, dh)).reshape(B, S, d_up)
+    out = (h * jax.nn.silu(z)) @ params["down_proj"]
+    C, n, m = state
+    return out, {"conv": new_conv, "C": C, "n": n, "m": m}
+
+
+def mlstm_cache_spec(cfg, batch: int):
+    d_up = 2 * cfg.d_model
+    nh = cfg.num_heads
+    dh = d_up // nh
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, 3, d_up), cfg.cdtype),
+        "C": jax.ShapeDtypeStruct((batch, nh, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, nh, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, nh), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d_model: int, num_heads: int, dtype):
+    ks = jax.random.split(key, 4)
+    dh = d_model // num_heads
+    return {
+        "w_in": dense_init(ks[0], d_model, 4 * d_model, dtype),
+        "b_in": jnp.concatenate([
+            jnp.zeros((2 * d_model,), jnp.float32),            # z, i
+            jnp.full((d_model,), 3.0, jnp.float32),            # f bias
+            jnp.zeros((d_model,), jnp.float32),                # o
+        ]),
+        "r": (jax.random.normal(ks[1], (4, num_heads, dh, dh), jnp.float32)
+              / jnp.sqrt(dh)).astype(dtype),
+        "head_norm": jnp.zeros((d_model,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_model, d_model, dtype),
+    }
+
+
+def slstm_step(params, xw, state, num_heads: int):
+    """xw: precomputed x @ w_in + b for one step, (B, 4*d).
+    state: (c, n, m, h) each (B, d). Returns (h_out, state)."""
+    c, n, m, h = state
+    B, d4 = xw.shape
+    d = d4 // 4
+    dh = d // num_heads
+    hh = h.reshape(B, num_heads, dh)
+    rec = jnp.einsum("bhd,ghde->gbhe", hh, params["r"].astype(jnp.float32))
+    rec = rec.reshape(4, B, d)
+    z_raw = xw[:, :d] + rec[0]
+    i_raw = xw[:, d:2 * d] + rec[1]
+    f_raw = xw[:, 2 * d:3 * d] + rec[2]
+    o_raw = xw[:, 3 * d:] + rec[3]
+
+    lf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(lf + m, i_raw)
+    i_eff = jnp.exp(i_raw - m_new)
+    f_eff = jnp.exp(lf + m - m_new)
+    c = f_eff * c + i_eff * jnp.tanh(z_raw)
+    n = f_eff * n + i_eff
+    h_new = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1e-6)
+    return h_new, (c, n, m_new, h_new)
+
+
+def slstm_apply(params, x, cfg, cache=None, unroll: bool = False):
+    """sLSTM block mixer: sequential scan over time. x: (B, S, d)."""
+    del unroll  # inherently sequential; counted analytically in the roofline
+    B, S, d = x.shape
+    nh = cfg.num_heads
+    xw = (x.astype(jnp.float32) @ params["w_in"].astype(jnp.float32)
+          + params["b_in"])                                # (B, S, 4d)
+    if cache is None:
+        zeros = jnp.zeros((B, d), jnp.float32)
+        state = (zeros, zeros, jnp.full((B, d), -1e30, jnp.float32), zeros)
+    else:
+        state = (cache["c"], cache["n"], cache["m"], cache["h"])
+
+    def step(st, xw_t):
+        h, st = slstm_step(params, xw_t, st, nh)
+        return st, h
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(xw, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1)                             # (B, S, d)
+    h = rmsnorm(h.reshape(B, S, nh, d // nh),
+                params["head_norm"].reshape(nh, d // nh)).reshape(B, S, d)
+    out = h.astype(x.dtype) @ params["out_proj"]
+    c, n, m, hst = state
+    return out, {"c": c, "n": n, "m": m, "h": hst}
+
+
+def slstm_cache_spec(cfg, batch: int):
+    d = cfg.d_model
+    f32 = jnp.float32
+    return {k: jax.ShapeDtypeStruct((batch, d), f32)
+            for k in ("c", "n", "m", "h")}

@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    sgd_momentum,
+    adamw,
+    constant_schedule,
+    inverse_time_schedule,
+    cosine_schedule,
+)

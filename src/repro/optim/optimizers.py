@@ -1,0 +1,125 @@
+"""Minimal optax-free optimizer substrate (container has jax/numpy only).
+
+The paper trains with plain SGD (lr 1e-3); its convergence theorem uses the
+inverse-time schedule η_t = 2/(µ(γ+t)). Both are provided, plus momentum and
+AdamW for the beyond-paper large-architecture training paths.
+
+API mirrors optax: ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (updates, state)``; apply with
+``jax.tree.map(lambda p, u: p + u, params, updates)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def inverse_time_schedule(mu: float, gamma: float) -> Schedule:
+    """Theorem 1's η_t = 2 / (µ (γ + t))."""
+    return lambda step: 2.0 / (mu * (gamma + step))
+
+
+def cosine_schedule(peak: float, total_steps: int, warmup: int = 0) -> Schedule:
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                        0.0, 1.0)
+        cos = peak * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple]   # (grads, state, params) -> (updates, state)
+
+
+class _SGDState(NamedTuple):
+    step: jnp.ndarray
+
+
+def sgd(lr: float | Schedule) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        del params
+        return _SGDState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        del params
+        eta = sched(state.step)
+        updates = jax.tree.map(lambda g: (-eta * g).astype(g.dtype), grads)
+        return updates, _SGDState(step=state.step + 1)
+
+    return Optimizer(init, update)
+
+
+class _MomState(NamedTuple):
+    step: jnp.ndarray
+    velocity: Any
+
+
+def sgd_momentum(lr: float | Schedule, beta: float = 0.9) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        return _MomState(step=jnp.zeros((), jnp.int32),
+                         velocity=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params=None):
+        del params
+        eta = sched(state.step)
+        vel = jax.tree.map(lambda v, g: beta * v + g, state.velocity, grads)
+        updates = jax.tree.map(lambda v: (-eta * v).astype(v.dtype), vel)
+        return updates, _MomState(step=state.step + 1, velocity=vel)
+
+    return Optimizer(init, update)
+
+
+class _AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw(lr: float | Schedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return _AdamWState(step=jnp.zeros((), jnp.int32),
+                           mu=jax.tree.map(zeros, params),
+                           nu=jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        eta = sched(state.step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        mu_hat = jax.tree.map(lambda m: m / (1 - b1 ** step), mu)
+        nu_hat = jax.tree.map(lambda v: v / (1 - b2 ** step), nu)
+
+        def upd(m, v, p):
+            u = -eta * (m / (jnp.sqrt(v) + eps) + weight_decay *
+                        p.astype(jnp.float32))
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu_hat, nu_hat, params)
+        return updates, _AdamWState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)

@@ -1,0 +1,2 @@
+from repro.training.local import make_local_runner, fedprox_wrap
+from repro.training.federated import FLConfig, run_federated, STRATEGIES

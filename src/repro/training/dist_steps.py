@@ -1,0 +1,301 @@
+"""Distributed (production-mesh) train / prefill / decode step builders.
+
+Each builder returns ``(fn, args_shape_structs, in_shardings)`` ready for
+``jax.jit(fn, in_shardings=...).lower(*args).compile()`` — the dry-run path.
+``args`` are ShapeDtypeStructs: nothing is ever allocated.
+
+Shard mode (default): one FSDP+TP-sharded model copy; CWFL enters as
+(a) per-example consensus loss weights and (b) post-backward channel noise
+(see repro.dist.fl_integration). Replica mode: clients are data ranks with
+stacked per-client parameters and the paper's Algorithm-1 aggregation
+(repro.core.cwfl) applied verbatim across the client axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import cwfl as cwfl_core
+from repro.dist import fl_integration as fli
+from repro.dist import sharding_rules as sr
+from repro.models import transformer as tfm
+from repro.models.config import ArchConfig, InputShape
+from repro.models.inputs import prefill_batch_specs, train_batch_specs
+from repro.optim import sgd
+
+
+def param_shapes(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda k: tfm.init_params(k, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def _weighted_ce(logits, labels, ex_weights):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    per_ex = jnp.mean(lse - gold, axis=-1)              # (B,)
+    return jnp.mean(per_ex * ex_weights)
+
+
+def auto_microbatches(cfg: ArchConfig, shape: InputShape, mesh,
+                      budget_bytes: float = 2e9) -> int:
+    """Gradient-accumulation factor M so that per-device saved remat inputs
+    (L × (B/M/dp) × S × (d/tp) × 2 bytes) fit the activation budget."""
+    import math
+    dp = math.prod(mesh.shape[a] for a in ("pod", "data")
+                   if a in mesh.axis_names)
+    tp = mesh.shape.get("model", 1)
+    d_sh = cfg.d_model // tp if cfg.d_model % tp == 0 else cfg.d_model
+    B, S = shape.global_batch, shape.seq_len
+    per_m1 = cfg.num_layers * max(B // dp, 1) * S * d_sh * 2
+    # CE logits are (B/dp, S, V) in bf16+f32 on each device (vocab is not
+    # reliably divisible by the model axis): bound them by microbatching.
+    per_m1 = max(per_m1, max(B // dp, 1) * S * cfg.vocab_size * 6)
+    if cfg.num_experts > 0:
+        # expert-parallel dispatch buffers (buf + h transients, E over dp):
+        # tokens/M · k · cf · d · 2 bytes · 2 buffers / dp per device
+        per_m1 = max(per_m1,
+                     B * S * cfg.top_k * cfg.capacity_factor
+                     * cfg.d_model * 2 * 2 / dp)
+    m = 1
+    max_m = max(B // dp, 1)
+    while per_m1 / m > budget_bytes and m < max_m:
+        m *= 2
+    return min(m, max_m)
+
+
+def make_train_step(cfg: ArchConfig, shape: InputShape, mesh,
+                    plan: Optional[fli.FLPlan] = None, lr: float = 1e-3,
+                    microbatches: Optional[int] = None,
+                    accum_dtype=jnp.float32, ce_mode: str = "gather"):
+    """Shard-mode train step: CWFL consensus weighting + channel noise,
+    gradient accumulation over M microbatches (auto-sized to the activation
+    budget), SGD (the paper's optimizer).
+
+    ``accum_dtype``: microbatch-gradient accumulator dtype. bfloat16 halves
+    the scan-carry footprint; with CWFL the injected channel-noise floor
+    (Theorem 1's Q₂) dominates bf16 rounding, so this is a principled
+    memory/precision trade recorded in EXPERIMENTS.md §Perf."""
+    optimizer = sgd(lr)
+    B = shape.global_batch
+    M = microbatches if microbatches is not None else auto_microbatches(
+        cfg, shape, mesh)
+    assert B % M == 0, (B, M)
+    if plan is not None:
+        ex_w = jnp.asarray(plan.example_weights(B))
+        noise_std = plan.noise_std
+    else:
+        ex_w = jnp.ones((B,), jnp.float32)
+        noise_std = 0.0
+
+    def loss_fn(params, batch, w):
+        logits, aux = tfm.forward(params, batch, cfg)
+        if cfg.frontend == "vision_stub":
+            logits = logits[:, cfg.prefix_tokens:]
+        if ce_mode == "resharded" and cfg.act_spec is not None:
+            # §Perf: batch-shard the logits before CE so logsumexp and the
+            # gold-logit gather stay device-local (all-to-all of the logits
+            # instead of an all-gather over vocab shards: ~tp× less traffic).
+            logits = jax.lax.with_sharding_constraint(
+                logits, P(cfg.act_spec[0], None, None))
+        ce = _weighted_ce(logits, batch["labels"], w)
+        return ce + cfg.router_aux_weight * aux, ce
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch, noise_key):
+        if M == 1:
+            (loss, ce), grads = grad_fn(params, batch, ex_w)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]),
+                batch)
+            w_mb = ex_w.reshape(M, B // M)
+
+            def acc(gsum, xs):
+                b, w = xs
+                (l, c), g = grad_fn(params, b, w)
+                gsum = jax.tree.map(
+                    lambda a, x: a + x.astype(accum_dtype), gsum, g)
+                return gsum, (l, c)
+
+            gsum0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            gsum, (ls, cs) = jax.lax.scan(acc, gsum0, (mb, w_mb))
+            grads = jax.tree.map(lambda g: g / M, gsum)
+            loss, ce = jnp.mean(ls), jnp.mean(cs)
+        grads = fli.add_channel_noise(grads, noise_key, noise_std)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(
+            lambda p, u: p + u.astype(p.dtype), params, updates)
+        return params, opt_state, {"loss": loss, "ce": ce}
+
+    p_shapes = param_shapes(cfg)
+    p_specs = sr.param_specs(p_shapes, mesh)
+    b_shapes = train_batch_specs(cfg, shape)
+    b_specs = sr.batch_specs(b_shapes, mesh)
+    opt_shapes = jax.eval_shape(optimizer.init, p_shapes)
+    opt_specs = jax.tree.map(lambda _: P(), opt_shapes)
+    key_shape = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    args = (p_shapes, opt_shapes, b_shapes, key_shape)
+    shardings = (p_specs, opt_specs, b_specs, P())
+    return step, args, shardings
+
+
+def make_prefill_step(cfg: ArchConfig, shape: InputShape, mesh):
+    def step(params, batch):
+        return tfm.prefill(params, batch, cfg)
+
+    p_shapes = param_shapes(cfg)
+    p_specs = sr.param_specs(p_shapes, mesh)
+    b_shapes = prefill_batch_specs(cfg, shape)
+    b_specs = sr.batch_specs(b_shapes, mesh)
+    args = (p_shapes, b_shapes)
+    shardings = (p_specs, b_specs)
+
+    # explicit cache out-sharding (batch over data, head_dim over model);
+    # trace under the mesh context (act_spec constraints need one)
+    with mesh:
+        out_shapes = jax.eval_shape(step, *args)
+    out_specs = (P(), sr.cache_specs(out_shapes[1], mesh))
+    return step, args, shardings, out_specs
+
+
+def make_decode_step(cfg: ArchConfig, shape: InputShape, mesh,
+                     window_override: Optional[int] = None,
+                     replicate_cache_heads: bool = False):
+    """One-token serve step against a ``shape.seq_len`` cache.
+
+    ``window_override``: serving-time sliding window (long_500k variants for
+    full-attention archs — DESIGN.md §6).
+    ``replicate_cache_heads``: §Perf 'cacherep' — keep the KV cache
+    replicated over the model axis (q heads stay model-sharded), making the
+    per-block q·k contraction device-local instead of an all-reduce over the
+    sharded head_dim. Correct call when the per-device cache fits HBM
+    (small-KV GQA archs)."""
+    run_cfg = cfg
+    if window_override:
+        pattern = tuple(
+            s.__class__(mixer=s.mixer,
+                        window=(min(s.window, window_override) or
+                                window_override) if s.mixer == "attn" else 0,
+                        ffn=s.ffn)
+            for s in cfg.pattern)
+        run_cfg = cfg.replace(pattern=pattern)
+
+    B = shape.global_batch
+    cache_shapes = tfm.decode_cache_specs(run_cfg, B, shape.seq_len)
+    token_shape = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
+
+    enc_kv_shape = None
+    if cfg.frontend == "audio_stub":
+        enc_kv_shape = {
+            "k": jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.num_kv_heads, cfg.hd), cfg.cdtype),
+            "v": jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.num_kv_heads, cfg.hd), cfg.cdtype),
+        }
+
+    def step(params, token, caches, pos, enc_kv=None):
+        return tfm.decode_step(params, token, caches, pos, run_cfg,
+                               enc_kv=enc_kv)
+
+    p_shapes = param_shapes(run_cfg)
+    p_specs = sr.param_specs(p_shapes, mesh)
+    c_specs = sr.cache_specs(cache_shapes, mesh)
+    if replicate_cache_heads:
+        c_specs = jax.tree.map(
+            lambda s: P(*[None if p == "model" else p for p in s]),
+            c_specs, is_leaf=lambda x: isinstance(x, P))
+    tok_spec = sr.batch_specs(token_shape, mesh)
+
+    if enc_kv_shape is not None:
+        enc_specs = jax.tree.map(
+            lambda s: sr.fit_spec(s.shape, (sr.BATCH, None, None, "model"),
+                                  mesh), enc_kv_shape)
+        args = (p_shapes, token_shape, cache_shapes, pos_shape, enc_kv_shape)
+        shardings = (p_specs, tok_spec, c_specs, P(), enc_specs)
+    else:
+        args = (p_shapes, token_shape, cache_shapes, pos_shape)
+        shardings = (p_specs, tok_spec, c_specs, P())
+    return step, args, shardings
+
+
+# ---------------------------------------------------------------------------
+# Replica mode: Algorithm 1 verbatim across the data axis.
+# ---------------------------------------------------------------------------
+
+def replica_param_specs(p_shapes, mesh):
+    """Per-client stacked params: client axis over data, TP over model only
+    (no FSDP — clients own divergent replicas)."""
+    def drop_fsdp(spec):
+        parts = tuple(None if p in ("data", "pod", ("pod", "data")) else p
+                      for p in spec)
+        return P("data", *parts)
+    base = sr.param_specs(p_shapes, mesh)
+    return jax.tree.map(drop_fsdp, base,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_replica_train_step(cfg: ArchConfig, shape: InputShape, mesh,
+                            plan: fli.FLPlan, lr: float = 1e-3,
+                            local_steps: int = 1):
+    """Paper-faithful round: E local SGD steps per client (vmapped over the
+    stacked client axis) followed by Algorithm-1 CWFL aggregation."""
+    K = plan.num_clients
+    B = shape.global_batch
+    per_client = max(B // K, 1)
+
+    def client_loss(params_k, batch_k):
+        logits, aux = tfm.forward(params_k, batch_k, cfg)
+        if cfg.frontend == "vision_stub":
+            logits = logits[:, cfg.prefix_tokens:]
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logits.astype(jnp.float32), batch_k["labels"][..., None],
+            axis=-1)[..., 0]
+        return jnp.mean(lse - gold) + cfg.router_aux_weight * aux
+
+    def local_update(params_k, batch_k):
+        def one(params_k, _):
+            loss, grads = jax.value_and_grad(client_loss)(params_k, batch_k)
+            params_k = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                                    params_k, grads)
+            return params_k, loss
+        params_k, losses = jax.lax.scan(one, params_k, None,
+                                        length=local_steps)
+        return params_k, jnp.mean(losses)
+
+    def step(stacked_params, batch, key):
+        # batch leaves: (K, per_client, ...)
+        stacked_params, losses = jax.vmap(local_update)(stacked_params, batch)
+        stacked_params, consensus = cwfl_core.aggregate(
+            stacked_params, plan.state, key)
+        return stacked_params, jnp.mean(losses)
+
+    p_shapes = param_shapes(cfg)
+    stacked_shapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), p_shapes)
+    p_specs = replica_param_specs(p_shapes, mesh)
+
+    b_shapes = train_batch_specs(
+        cfg, shape.__class__(shape.name, shape.seq_len, per_client * K,
+                             shape.kind))
+    b_shapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((K, per_client) + s.shape[1:], s.dtype),
+        b_shapes)
+    b_specs = jax.tree.map(
+        lambda s: sr.fit_spec(s.shape, ("data",) + (None,) * (s.ndim - 1),
+                              mesh), b_shapes)
+    key_shape = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    args = (stacked_shapes, b_shapes, key_shape)
+    shardings = (p_specs, b_specs, P())
+    return step, args, shardings

@@ -1,0 +1,119 @@
+"""Serving glue: cache capacity management and a simple batched decode loop.
+
+``pad_caches`` converts prefill-produced caches (length = prompt) into
+fixed-capacity decode caches:
+  * full-attention layers: zero-pad the time axis to ``cache_len``;
+  * sliding-window layers: re-order the last W entries into ring-buffer
+    layout (slot j holds the newest position p ≡ j (mod W)).
+SSM/xLSTM states are size-invariant and pass through unchanged.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+from repro.models.config import ArchConfig
+
+
+def _pad_time(x, target):
+    pad = target - x.shape[1]
+    if pad <= 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+
+
+def _ring_order(S: int, W: int) -> np.ndarray:
+    """Index map: ring slot j <- absolute position (newest p ≡ j mod W)."""
+    j = np.arange(W)
+    p = S - 1 - ((S - 1 - j) % W)
+    return p
+
+
+def pad_caches(caches, cfg: ArchConfig, cache_len: int, prompt_len: int):
+    """Prefill caches -> decode caches of fixed capacity."""
+    out = {}
+    for i, spec in enumerate(cfg.pattern):
+        c = caches[f"b{i}"]["mixer"]
+        if spec.mixer == "attn":
+            W = min(cache_len, spec.window) if spec.window > 0 else cache_len
+            if spec.window > 0 and prompt_len >= W:
+                idx = jnp.asarray(_ring_order(prompt_len, W))
+                c = {"k": c["k"][:, :, idx], "v": c["v"][:, :, idx]}
+            else:
+                c = {"k": _pad_time_stacked(c["k"], W),
+                     "v": _pad_time_stacked(c["v"], W)}
+        out[f"b{i}"] = {"mixer": c}
+    return out
+
+
+def _pad_time_stacked(x, target):
+    """x: (periods, B, S, ...) — pad axis 2."""
+    pad = target - x.shape[2]
+    if pad <= 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 3))
+
+
+def apply_cache_deltas(caches, deltas, pos, cfg: ArchConfig):
+    """Engine-side cache write: scatter each attention layer's K/V delta at
+    ``pos`` (ring layers: pos % W); recurrent states are replaced whole."""
+    out = {}
+    for i, spec in enumerate(cfg.pattern):
+        c = caches[f"b{i}"]["mixer"]
+        d = deltas[f"b{i}"]["mixer"]
+        if spec.mixer == "attn":
+            W = c["k"].shape[2]                    # (periods, B, W, KV, hd)
+            idx = (pos % W if spec.window > 0 and W <= spec.window
+                   else pos).astype(jnp.int32)
+            zero = jnp.zeros((), jnp.int32)
+            new = {
+                "k": jax.lax.dynamic_update_slice(
+                    c["k"], d["k_new"][:, :, None] if d["k_new"].ndim == 4
+                    else d["k_new"], (zero, zero, idx, zero, zero)),
+                "v": jax.lax.dynamic_update_slice(
+                    c["v"], d["v_new"][:, :, None] if d["v_new"].ndim == 4
+                    else d["v_new"], (zero, zero, idx, zero, zero)),
+            }
+            out[f"b{i}"] = {"mixer": new}
+        else:
+            out[f"b{i}"] = {"mixer": d}            # full recurrent state
+    return out
+
+
+def greedy_decode(params, batch, cfg: ArchConfig, num_tokens: int,
+                  cache_len: Optional[int] = None):
+    """Prefill the prompt then greedily decode ``num_tokens`` tokens.
+
+    Returns (tokens (B, num_tokens), last_logits).
+    """
+    prompt_len = batch["tokens"].shape[1]
+    if cfg.frontend == "vision_stub":
+        prompt_len += cfg.prefix_tokens
+    cache_len = cache_len or (prompt_len + num_tokens)
+
+    logits, caches = tfm.prefill(params, batch, cfg)
+    caches = pad_caches(caches, cfg, cache_len, prompt_len)
+
+    enc_kv = None
+    if cfg.frontend == "audio_stub":
+        enc_out = tfm._encode_audio(params, batch, cfg)
+        enc_kv = tfm.encoder_kv(tfm._first_cross_params(params, cfg),
+                                enc_out, cfg)
+
+    def body(carry, _):
+        tok, caches, pos, logits = carry
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        logits, deltas = tfm.decode_step(params, nxt, caches, pos, cfg,
+                                         enc_kv=enc_kv)
+        caches = apply_cache_deltas(caches, deltas, pos, cfg)
+        return (nxt, caches, pos + 1, logits), nxt[:, 0]
+
+    carry = (batch["tokens"][:, -1:], caches,
+             jnp.asarray(prompt_len, jnp.int32), logits)
+    (_, _, _, last_logits), toks = jax.lax.scan(body, carry, None,
+                                                length=num_tokens)
+    return jnp.moveaxis(toks, 0, 1), last_logits

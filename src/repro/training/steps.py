@@ -1,0 +1,57 @@
+"""Single-model train/serve step builders (the distributed versions wrap
+these with shardings + the CWFL gradient collective; see repro.dist).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.config import ArchConfig
+
+
+def cross_entropy(logits, labels):
+    """Mean token CE in float32. logits: (B, S, V), labels: (B, S) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def make_loss_fn(cfg: ArchConfig) -> Callable:
+    def loss_fn(params, batch):
+        logits, aux = tfm.forward(params, batch, cfg)
+        if cfg.frontend == "vision_stub":
+            logits = logits[:, cfg.prefix_tokens:]
+        ce = cross_entropy(logits, batch["labels"])
+        return ce + cfg.router_aux_weight * aux, ce
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, optimizer) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch):
+        (loss, ce), grads = grad_fn(params, batch)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(jnp.add, params, updates)
+        return params, opt_state, {"loss": loss, "ce": ce}
+
+    return step
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    def step(params, batch):
+        return tfm.prefill(params, batch, cfg)
+    return step
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    """(params, token (B,1), caches, pos) -> (logits (B,1,V), caches)."""
+    def step(params, token, caches, pos, enc_kv=None):
+        return tfm.decode_step(params, token, caches, pos, cfg, enc_kv=enc_kv)
+    return step

@@ -1,0 +1,72 @@
+"""Pytree utilities used throughout the framework.
+
+All CWFL aggregation operators act on parameter/gradient *pytrees*; these
+helpers keep the core algorithm readable and vectorization-friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_weighted_sum(trees, weights):
+    """sum_i weights[i] * trees[i]. ``trees`` is a list of pytrees."""
+    weights = jnp.asarray(weights)
+    return jax.tree.map(
+        lambda *leaves: sum(w * l for w, l in zip(weights, leaves)), *trees
+    )
+
+
+def tree_sq_norm(a):
+    leaves = jax.tree.leaves(a)
+    return sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+
+
+def tree_l2_norm(a):
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def tree_size(a) -> int:
+    """Total number of scalar parameters d = dim(theta)."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(a))
+
+
+def tree_add_noise(a, key, sigma):
+    """a + w, w ~ N(0, sigma^2 I_d), elementwise over every leaf."""
+    leaves, treedef = jax.tree.flatten(a)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [
+        x + sigma * jax.random.normal(k, x.shape, dtype=x.dtype)
+        for x, k in zip(leaves, keys)
+    ]
+    return jax.tree.unflatten(treedef, noisy)
+
+
+def tree_flatten_vector(a):
+    """Flatten a pytree into a single 1-D vector (for OTA transmission)."""
+    leaves = jax.tree.leaves(a)
+    return jnp.concatenate([jnp.ravel(x) for x in leaves], axis=0)
+
+
+def tree_unflatten_vector(vec, like):
+    """Inverse of :func:`tree_flatten_vector` given a template pytree."""
+    leaves, treedef = jax.tree.flatten(like)
+    out, off = [], 0
+    for x in leaves:
+        n = int(np.prod(x.shape))
+        out.append(jnp.reshape(vec[off : off + n], x.shape).astype(x.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,10 @@
+"""Shared test config. NOTE: no XLA_FLAGS here — tests must see ONE device
+(the dry-run is the only place that forces 512 placeholder devices, and it
+does so in its own process)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

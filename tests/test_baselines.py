@@ -1,0 +1,87 @@
+"""Baseline strategies: FedAvg, COTAF-modified, fully-decentralized."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines as bl
+from repro.core.topology import TopologyConfig, make_topology
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return make_topology(jax.random.PRNGKey(0),
+                         TopologyConfig(num_clients=12, num_hotspots=2))
+
+
+def test_fedavg_is_exact_mean():
+    params = {"w": jnp.arange(12.0).reshape(4, 3)}
+    new, cons = bl.fedavg_aggregate(params)
+    np.testing.assert_allclose(np.asarray(cons["w"]),
+                               np.asarray(params["w"].mean(0)), atol=1e-6)
+    for k in range(4):
+        np.testing.assert_allclose(np.asarray(new["w"][k]),
+                                   np.asarray(cons["w"]), atol=1e-6)
+
+
+def test_fedavg_weighted():
+    params = {"w": jnp.asarray([[0.0], [1.0]])}
+    _, cons = bl.fedavg_aggregate(params, weights=jnp.asarray([3.0, 1.0]))
+    np.testing.assert_allclose(float(cons["w"][0]), 0.25, atol=1e-6)
+
+
+def test_metropolis_doubly_stochastic_random_graphs():
+    for seed in range(5):
+        key = jax.random.PRNGKey(seed)
+        adj = jax.random.bernoulli(key, 0.4, (10, 10))
+        adj = jnp.triu(adj, 1)
+        adj = adj | adj.T
+        W = bl.metropolis_weights(adj)
+        np.testing.assert_allclose(np.asarray(W.sum(0)), 1.0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(W.sum(1)), 1.0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(W), np.asarray(W.T), atol=1e-6)
+        assert float(jnp.min(W)) >= 0.0
+
+
+def test_decentralized_consensus_converges_to_mean():
+    """Iterating the noiseless mixing reaches the global average (eq. 3's
+    consensus property — requires a CONNECTED graph, so disable outage)."""
+    topo = make_topology(jax.random.PRNGKey(0),
+                         TopologyConfig(num_clients=12, num_hotspots=2,
+                                        outage_snr_db=-1000.0))
+    state = bl.decentralized_setup(topo, jax.random.PRNGKey(1), snr_db=200.0)
+    K = topo.num_clients
+    params = {"w": jax.random.normal(jax.random.PRNGKey(2), (K, 8))}
+    target = np.asarray(params["w"].mean(0))
+    cur = params
+    for i in range(200):
+        cur, _ = bl.decentralized_aggregate(cur, state,
+                                            jax.random.PRNGKey(3 + i))
+    got = np.asarray(cur["w"])
+    for k in range(K):
+        np.testing.assert_allclose(got[k], target, atol=1e-2)
+
+
+def test_cotaf_noiseless_is_weighted_mean(topo):
+    state = bl.cotaf_setup(topo, jax.random.PRNGKey(1), snr_db=40.0)
+    state = bl.COTAFState(client_power=state.client_power,
+                          total_power=state.total_power,
+                          noise_std=state.noise_std * 0.0)
+    K = topo.num_clients
+    params = {"w": jax.random.normal(jax.random.PRNGKey(4), (K, 8))}
+    new, cons = bl.cotaf_aggregate(params, state, jax.random.PRNGKey(5),
+                                   precode=False)
+    p = np.sqrt(np.asarray(state.client_power) / state.total_power)
+    expect = (p[:, None] * np.asarray(params["w"])).sum(0) / p.sum()
+    np.testing.assert_allclose(np.asarray(cons["w"]), expect, rtol=1e-4)
+
+
+def test_cotaf_all_clients_equal_after_broadcast(topo):
+    state = bl.cotaf_setup(topo, jax.random.PRNGKey(1), snr_db=40.0)
+    K = topo.num_clients
+    params = {"w": jax.random.normal(jax.random.PRNGKey(6), (K, 8))}
+    new, cons = bl.cotaf_aggregate(params, state, jax.random.PRNGKey(7))
+    for k in range(K):
+        np.testing.assert_allclose(np.asarray(new["w"][k]),
+                                   np.asarray(cons["w"]), atol=1e-6)

@@ -1,0 +1,64 @@
+"""Channel-layer invariants (eq. 4-6): water-filling, precoding, OTA MAC."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import channel as ch
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    gains=st.lists(st.floats(0.01, 100.0), min_size=2, max_size=32),
+    power=st.floats(0.5, 1e5),
+)
+def test_water_filling_simplex(gains, power):
+    """Σ P_k = P, P_k ≥ 0 — always, for any gains (hypothesis)."""
+    p = ch.water_filling(jnp.asarray(gains), power)
+    assert float(jnp.min(p)) >= 0.0
+    np.testing.assert_allclose(float(jnp.sum(p)), power, rtol=1e-4)
+
+
+def test_water_filling_prefers_better_channels():
+    g = jnp.asarray([0.1, 1.0, 10.0, 100.0])
+    p = ch.water_filling(g, 4.0)
+    assert float(p[3]) >= float(p[2]) >= float(p[1]) >= float(p[0])
+
+
+def test_water_filling_equal_gains_equal_power():
+    p = ch.water_filling(jnp.full((8,), 3.0), 16.0)
+    np.testing.assert_allclose(np.asarray(p), 2.0, rtol=1e-4)
+
+
+@settings(deadline=None, max_examples=30)
+@given(power=st.floats(0.1, 100.0), norm=st.floats(0.01, 1e4))
+def test_precoding_meets_power_constraint(power, norm):
+    """eq. (5): E||x||² = P^t ||θ||² ≤ P_k."""
+    pt = ch.precoding_factor(jnp.asarray(power), jnp.asarray(norm))
+    assert float(pt) * norm <= power * (1 + 1e-4) + 1e-6
+    assert float(pt) <= power * (1 + 1e-5) + 1e-6   # float32 rounding margin
+
+
+def test_ota_mac_noiseless_superposition():
+    """y = Σ_k a_k s_k for masked clients, exact when σ=0 (eq. 4)."""
+    key = jax.random.PRNGKey(0)
+    s = jax.random.normal(key, (5, 64))
+    a = jnp.asarray([1.0, 0.5, 2.0, 0.1, 3.0])
+    m = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0])
+    y = ch.ota_mac(s, a, m, jax.random.PRNGKey(1), 0.0)
+    expect = 1.0 * s[0] + 2.0 * s[2] + 0.1 * s[3]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect), atol=1e-5)
+
+
+def test_ota_mac_noise_statistics():
+    """Receiver noise has the configured std (law of large numbers)."""
+    y = ch.ota_mac(jnp.zeros((1, 200000)), jnp.ones((1,)), jnp.zeros((1,)),
+                   jax.random.PRNGKey(2), 0.5)
+    assert abs(float(jnp.std(y)) - 0.5) < 0.01
+
+
+def test_snr_db_conversion_roundtrip():
+    p = 1e4
+    sigma2 = ch.snr_db_to_noise_var(p, 40.0)
+    np.testing.assert_allclose(10 * np.log10(p / sigma2), 40.0, rtol=1e-6)

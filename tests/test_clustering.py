@@ -1,0 +1,78 @@
+"""SNR K-means clustering (paper §IV)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clustering as cl
+from repro.core.topology import TopologyConfig, make_topology
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return make_topology(jax.random.PRNGKey(0),
+                         TopologyConfig(num_clients=24, num_hotspots=3))
+
+
+def test_cluster_plan_partition(topo):
+    plan = cl.make_cluster_plan(topo.link_snr, topo.adjacency, 3,
+                                jax.random.PRNGKey(1))
+    # every client in exactly one cluster
+    np.testing.assert_allclose(np.asarray(plan.membership.sum(0)), 1.0)
+    # heads belong to their own cluster
+    for c, h in enumerate(np.asarray(plan.heads)):
+        assert int(plan.assignment[h]) == c
+    assert float(plan.head_mask.sum()) == 3
+
+
+def test_cluster_snr_positive(topo):
+    plan = cl.make_cluster_plan(topo.link_snr, topo.adjacency, 3,
+                                jax.random.PRNGKey(1))
+    assert np.all(np.asarray(plan.cluster_snr) > 0)
+
+
+def test_geometric_hotspots_recovered():
+    """Clients around the same hotspot should mostly share a cluster."""
+    topo = make_topology(jax.random.PRNGKey(5),
+                         TopologyConfig(num_clients=30, num_hotspots=3,
+                                        hotspot_std=2.0, area_size=300.0))
+    plan = cl.make_cluster_plan(topo.link_snr, topo.adjacency, 3,
+                                jax.random.PRNGKey(2))
+    pos = np.asarray(topo.positions)
+    assign = np.asarray(plan.assignment)
+    # within-cluster distances should be far below global distances
+    d_all, d_in = [], []
+    for i in range(30):
+        for j in range(i + 1, 30):
+            d = np.linalg.norm(pos[i] - pos[j])
+            d_all.append(d)
+            if assign[i] == assign[j]:
+                d_in.append(d)
+    assert np.mean(d_in) < 0.6 * np.mean(d_all)
+
+
+@settings(deadline=None, max_examples=20)
+@given(xi=st.lists(st.floats(0.01, 1e5), min_size=2, max_size=8))
+def test_consensus_weights_rows_sum_to_one(xi):
+    """eq. (9): W rows sum to 1 over j≠c, diagonal 0, higher SNR ⇒ higher
+    weight (hypothesis over arbitrary SNR vectors)."""
+    W = np.asarray(cl.consensus_weights(jnp.asarray(xi)))
+    C = len(xi)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, rtol=1e-4)
+    np.testing.assert_allclose(np.diag(W), 0.0, atol=1e-7)
+    # monotonicity in ξ_j for a fixed receiver row
+    for c in range(C):
+        others = [j for j in range(C) if j != c]
+        order = np.argsort([xi[j] for j in others])
+        w_sorted = W[c, [others[i] for i in order]]
+        assert np.all(np.diff(w_sorted) >= -1e-6)
+
+
+def test_kmeans_deterministic_given_key(topo):
+    p1 = cl.make_cluster_plan(topo.link_snr, topo.adjacency, 3,
+                              jax.random.PRNGKey(7))
+    p2 = cl.make_cluster_plan(topo.link_snr, topo.adjacency, 3,
+                              jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(np.asarray(p1.assignment),
+                                  np.asarray(p2.assignment))

@@ -1,0 +1,146 @@
+"""CWFL aggregation operator (Algorithm 1, eq. 8-9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cwfl
+from repro.core.topology import TopologyConfig, make_topology
+from repro.utils import tree_weighted_sum
+
+
+@pytest.fixture(scope="module")
+def setup():
+    topo = make_topology(jax.random.PRNGKey(0),
+                         TopologyConfig(num_clients=16, num_hotspots=3))
+    state = cwfl.setup(topo, cwfl.CWFLConfig(num_clusters=3, snr_db=40.0),
+                       jax.random.PRNGKey(1))
+    return topo, state
+
+
+def _noiseless(state):
+    return cwfl.CWFLState(
+        plan=state.plan, client_power=state.client_power,
+        total_power=state.total_power,
+        head_noise_std=state.head_noise_std * 0.0,
+        consensus_noise_std=state.consensus_noise_std * 0.0,
+        mix=state.mix)
+
+
+def _params(key, K):
+    return {"w": jax.random.normal(key, (K, 6, 4)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (K, 4))}
+
+
+def test_phase1_weights_eq8(setup):
+    """eq. (8): p_k = sqrt(P_k/P) for members, 1 for the head's virtual
+    client; zero outside the cluster."""
+    _, state = setup
+    A = np.asarray(cwfl.phase1_weights(state))
+    p = np.sqrt(np.asarray(state.client_power) / state.total_power)
+    assign = np.asarray(state.plan.assignment)
+    heads = set(np.asarray(state.plan.heads).tolist())
+    for c in range(A.shape[0]):
+        for k in range(A.shape[1]):
+            if assign[k] != c:
+                assert A[c, k] == 0.0
+            elif k in heads:
+                np.testing.assert_allclose(A[c, k], 1.0)
+            else:
+                np.testing.assert_allclose(A[c, k], p[k], rtol=1e-5)
+
+
+def test_noiseless_broadcast_equality(setup):
+    """After phase 3, all members of a cluster hold identical parameters."""
+    _, state = setup
+    K = state.num_clients
+    params = _params(jax.random.PRNGKey(2), K)
+    new, _ = cwfl.aggregate(params, _noiseless(state), jax.random.PRNGKey(3))
+    assign = np.asarray(state.plan.assignment)
+    w = np.asarray(new["w"])
+    for c in range(state.num_clusters):
+        idx = np.where(assign == c)[0]
+        for i in idx[1:]:
+            np.testing.assert_allclose(w[i], w[idx[0]], atol=1e-6)
+
+
+def test_identical_params_fixed_point(setup):
+    """Normalized noiseless aggregation is a projection: identical client
+    params are a fixed point (convex-combination property)."""
+    _, state = setup
+    K = state.num_clients
+    base = {"w": jax.random.normal(jax.random.PRNGKey(4), (6, 4))}
+    stacked = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (K,) + x.shape),
+                           base)
+    new, cons = cwfl.aggregate(stacked, _noiseless(state),
+                               jax.random.PRNGKey(5))
+    np.testing.assert_allclose(np.asarray(new["w"]), np.asarray(stacked["w"]),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cons["w"]), np.asarray(base["w"]),
+                               atol=1e-5)
+
+
+def test_unnormalized_literal_equations(setup):
+    """normalize=False implements eq. (8)/(9) literally: θ̃_c = Σ p_k θ_k
+    (weights NOT summing to 1) and θ̄_c = Σ_j W(c,j) θ̃_j + θ̃_c."""
+    _, state = setup
+    K = state.num_clients
+    params = _params(jax.random.PRNGKey(6), K)
+    st0 = _noiseless(state)
+    new, _ = cwfl.aggregate(params, st0, jax.random.PRNGKey(7),
+                            normalize=False, precode=False)
+    # manual computation
+    A = np.asarray(cwfl.phase1_weights(state))              # (C, K)
+    flat = np.asarray(params["w"]).reshape(K, -1)
+    theta_t = A @ flat                                       # (C, d)
+    B = np.asarray(state.mix) + np.eye(state.num_clusters)
+    theta_bar = B @ theta_t
+    got = np.asarray(new["w"]).reshape(K, -1)
+    assign = np.asarray(state.plan.assignment)
+    for k in range(K):
+        np.testing.assert_allclose(got[k], theta_bar[assign[k]], rtol=2e-4,
+                                   atol=1e-4)
+
+
+def test_noise_floor_scales_with_snr(setup):
+    """Higher SNR ⇒ lower aggregation error vs the noiseless result (the
+    Q₂ → 0 behaviour of Theorem 1)."""
+    topo, _ = setup
+    K = topo.num_clients
+    params = _params(jax.random.PRNGKey(8), K)
+    errs = []
+    for snr in (10.0, 30.0, 50.0):
+        state = cwfl.setup(topo, cwfl.CWFLConfig(num_clusters=3, snr_db=snr),
+                           jax.random.PRNGKey(1))
+        new, _ = cwfl.aggregate(params, state, jax.random.PRNGKey(9))
+        new0, _ = cwfl.aggregate(params, _noiseless(state),
+                                 jax.random.PRNGKey(9))
+        errs.append(float(jnp.mean((new["w"] - new0["w"]) ** 2)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_channel_uses_efficiency():
+    """Paper's headline efficiency: CWFL ≪ decentralized channel uses."""
+    uses = cwfl.channel_uses_per_round(50, 3)
+    assert uses["cwfl"] == 3 * 2 + 3
+    assert uses["decentralized"] == 50 * 49
+    assert uses["cwfl"] < uses["decentralized"] / 100
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 10_000))
+def test_aggregation_linearity(setup, seed):
+    """Noiseless aggregation is linear: agg(a+b) = agg(a) + agg(b)."""
+    _, state = setup
+    st0 = _noiseless(state)
+    K = state.num_clients
+    a = _params(jax.random.PRNGKey(seed), K)
+    b = _params(jax.random.PRNGKey(seed + 1), K)
+    ab = jax.tree.map(jnp.add, a, b)
+    k = jax.random.PRNGKey(0)
+    ya, _ = cwfl.aggregate(a, st0, k, precode=False)
+    yb, _ = cwfl.aggregate(b, st0, k, precode=False)
+    yab, _ = cwfl.aggregate(ab, st0, k, precode=False)
+    np.testing.assert_allclose(np.asarray(ya["w"] + yb["w"]),
+                               np.asarray(yab["w"]), atol=1e-4)

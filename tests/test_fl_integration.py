@@ -1,0 +1,76 @@
+"""CWFL-in-training integration: the linearity equivalence (weighted loss
+⇔ explicit consensus of per-client grads) and the FL plan invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.fl_integration import FLPlan, make_fl_plan
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return make_fl_plan(num_clients=16, num_clusters=4,
+                        key=jax.random.PRNGKey(0), snr_db=40.0)
+
+
+def test_beta_is_distribution(plan):
+    beta = plan.beta
+    assert beta.shape == (16,)
+    assert np.all(beta >= 0)
+    np.testing.assert_allclose(beta.sum(), 1.0, rtol=1e-5)
+
+
+def test_example_weights_mean_one(plan):
+    w = plan.example_weights(256)
+    assert w.shape == (256,)
+    np.testing.assert_allclose(w.mean(), 1.0, rtol=1e-5)
+    # examples of the same client share a weight
+    c = plan.client_of_example(256)
+    for k in range(16):
+        vals = w[c == k]
+        assert np.allclose(vals, vals[0])
+
+
+def test_weighted_loss_equals_explicit_consensus(plan):
+    """KEY equivalence (DESIGN.md §3 shard mode): grad of the β-weighted
+    mean loss == Σ_k β_k grad_k of per-client mean losses."""
+    d, K, n = 5, 16, 4          # n examples per client
+    key = jax.random.PRNGKey(1)
+    X = jax.random.normal(key, (K * n, d))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (K * n,))
+    theta = jax.random.normal(jax.random.fold_in(key, 2), (d,))
+    w_ex = jnp.asarray(plan.example_weights(K * n))
+
+    def weighted_loss(theta):
+        pred = X @ theta
+        per_ex = (pred - y) ** 2
+        return jnp.mean(per_ex * w_ex)
+
+    g_weighted = jax.grad(weighted_loss)(theta)
+
+    # explicit per-client grads + β-weighted consensus
+    beta = jnp.asarray(plan.beta)
+
+    def client_loss(theta, k):
+        pred = X[k * n:(k + 1) * n] @ theta
+        return jnp.mean((pred - y[k * n:(k + 1) * n]) ** 2)
+
+    g_explicit = sum(beta[k] * jax.grad(client_loss)(theta, k)
+                     for k in range(K))
+    np.testing.assert_allclose(np.asarray(g_weighted),
+                               np.asarray(g_explicit), rtol=1e-4, atol=1e-5)
+
+
+def test_noise_std_positive_and_snr_monotone():
+    stds = []
+    for snr in (10.0, 30.0, 50.0):
+        p = make_fl_plan(16, 4, jax.random.PRNGKey(0), snr_db=snr)
+        stds.append(p.noise_std)
+    assert stds[0] > stds[1] > stds[2] > 0.0
+
+
+def test_cluster_weights_rows_normalized(plan):
+    B = plan.cluster_weights
+    np.testing.assert_allclose(B.sum(axis=1), 1.0, rtol=1e-5)
+    assert np.all(B >= 0)

@@ -1,0 +1,96 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs the
+pure-jnp oracles in repro.kernels.ref (assert_allclose)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import flash_attention_op, ota_aggregate_op
+from repro.kernels.ota_aggregate import ota_aggregate
+from repro.kernels.ref import flash_attention_ref, ota_aggregate_ref
+from repro.models.attention import flash_attention as model_flash
+
+
+@pytest.mark.parametrize("K,C,d", [(8, 2, 512), (50, 3, 4096), (27, 4, 1000),
+                                   (12, 3, 257)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ota_aggregate_matches_ref(K, C, d, dtype):
+    key = jax.random.PRNGKey(0)
+    s = jax.random.normal(key, (K, d), dtype)
+    w = jax.random.uniform(jax.random.PRNGKey(1), (C, K), jnp.float32)
+    n = 0.1 * jax.random.normal(jax.random.PRNGKey(2), (C, d), jnp.float32)
+    y = ota_aggregate(s, w.astype(dtype), n.astype(dtype), tile=512)
+    r = ota_aggregate_ref(s, w.astype(dtype), n.astype(dtype))
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+def test_ota_aggregate_linearity():
+    """MAC is linear: aggregate(a+b) = aggregate(a) + aggregate(b) (no noise)."""
+    key = jax.random.PRNGKey(3)
+    a = jax.random.normal(key, (10, 777))
+    b = jax.random.normal(jax.random.PRNGKey(4), (10, 777))
+    w = jax.random.uniform(jax.random.PRNGKey(5), (3, 10))
+    zero = jnp.zeros((3, 777))
+    ya = ota_aggregate(a, w, zero, tile=256)
+    yb = ota_aggregate(b, w, zero, tile=256)
+    yab = ota_aggregate(a + b, w, zero, tile=256)
+    np.testing.assert_allclose(np.asarray(ya + yb), np.asarray(yab),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("B,H,KV,S,D", [(2, 4, 2, 256, 64), (1, 2, 1, 100, 32),
+                                        (1, 8, 8, 130, 128), (2, 6, 2, 64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, H, KV, S, D, dtype):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, H, S, D), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, KV, S, D), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, KV, S, D), dtype)
+    o = flash_attention(q, k, v, block_q=64, block_k=64)
+    r = flash_attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window,cap,causal", [(0, 0.0, True), (64, 0.0, True),
+                                               (32, 50.0, True),
+                                               (0, 30.0, False)])
+def test_flash_attention_masking_modes(window, cap, causal):
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (1, 4, 192, 64))
+    k = jax.random.normal(jax.random.PRNGKey(8), (1, 2, 192, 64))
+    v = jax.random.normal(jax.random.PRNGKey(9), (1, 2, 192, 64))
+    o = flash_attention(q, k, v, causal=causal, window=window, cap=cap,
+                        block_q=64, block_k=64)
+    r = flash_attention_ref(q, k, v, causal=causal, window=window, cap=cap)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+
+def test_flash_kernel_matches_model_attention():
+    """The Pallas kernel and the model's chunked-jnp attention agree."""
+    key = jax.random.PRNGKey(11)
+    B, S, H, KV, D = 2, 96, 4, 2, 32
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(12), (B, S, KV, D))
+    v = jax.random.normal(jax.random.PRNGKey(13), (B, S, KV, D))
+    o_kernel = flash_attention_op(q, k, v, block_q=32, block_k=32)
+    o_model = model_flash(q, k, v, causal=True, block=32)
+    np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_model),
+                               atol=2e-5)
+
+
+def test_ota_op_pytree_roundtrip():
+    """ota_aggregate_op: pytree in, per-cluster pytree out; zero noise &
+    one-hot weights reproduce the selected client's parameters."""
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 5, 3)),
+              "b": jax.random.normal(jax.random.PRNGKey(1), (4, 7))}
+    w = jnp.eye(4)[:2]                        # clusters pick clients 0, 1
+    out = ota_aggregate_op(params, w, jax.random.PRNGKey(2), 0.0)
+    np.testing.assert_allclose(np.asarray(out["w"][0]),
+                               np.asarray(params["w"][0]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out["b"][1]),
+                               np.asarray(params["b"][1]), atol=1e-6)

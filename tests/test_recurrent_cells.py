@@ -1,0 +1,130 @@
+"""Recurrent mixers: chunkwise-parallel forms must equal the step-by-step
+recurrences (mLSTM), and chunked selective scan must equal a sequential
+reference (Mamba)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import ArchConfig, LayerSpec
+from repro.models.ssm import mamba_apply, mamba_init, selective_scan, _ssm_coeffs
+from repro.models.xlstm import (mlstm_cell, mlstm_step, slstm_apply,
+                                slstm_init, mlstm_init, mlstm_apply)
+
+
+def test_mlstm_chunkwise_equals_recurrence():
+    B, S, nh, dh = 2, 37, 3, 8
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, nh, dh))
+    k = jax.random.normal(ks[1], (B, S, nh, dh))
+    v = jax.random.normal(ks[2], (B, S, nh, dh))
+    i_raw = jax.random.normal(ks[3], (B, S, nh))
+    f_raw = jax.random.normal(ks[4], (B, S, nh)) + 2.0
+
+    h_chunk, state_chunk = mlstm_cell(q, k, v, i_raw, f_raw, chunk=8)
+
+    # step-by-step oracle
+    state = (jnp.zeros((B, nh, dh, dh)), jnp.zeros((B, nh, dh)),
+             jnp.full((B, nh), -1e30))
+    hs = []
+    for t in range(S):
+        h_t, state = mlstm_step(q[:, t], k[:, t], v[:, t], i_raw[:, t],
+                                f_raw[:, t], state)
+        hs.append(h_t)
+    h_ref = jnp.stack(hs, axis=1)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h_ref),
+                               atol=2e-4, rtol=2e-3)
+    # final states agree
+    np.testing.assert_allclose(np.asarray(state_chunk[0]),
+                               np.asarray(state[0]), atol=2e-4, rtol=2e-3)
+
+
+def test_mlstm_chunk_size_invariance():
+    B, S, nh, dh = 1, 64, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    q, k, v = (jax.random.normal(ks[i], (B, S, nh, dh)) for i in range(3))
+    i_raw = jax.random.normal(ks[3], (B, S, nh))
+    f_raw = jax.random.normal(ks[4], (B, S, nh)) + 1.0
+    h8, _ = mlstm_cell(q, k, v, i_raw, f_raw, chunk=8)
+    h64, _ = mlstm_cell(q, k, v, i_raw, f_raw, chunk=64)
+    h13, _ = mlstm_cell(q, k, v, i_raw, f_raw, chunk=13)  # ragged chunks
+    np.testing.assert_allclose(np.asarray(h8), np.asarray(h64), atol=2e-4,
+                               rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(h13), np.asarray(h64), atol=2e-4,
+                               rtol=2e-3)
+
+
+def _mamba_cfg(d_model=32, chunk=8):
+    return ArchConfig(name="t", arch_type="ssm", num_layers=1, d_model=d_model,
+                      num_heads=2, num_kv_heads=2, d_ff=0, vocab_size=64,
+                      pattern=(LayerSpec(mixer="mamba", ffn="none"),),
+                      ssm_chunk=chunk)
+
+
+def test_selective_scan_sequential_reference():
+    cfg = _mamba_cfg()
+    p = mamba_init(jax.random.PRNGKey(0), cfg.d_model, cfg.d_inner,
+                   cfg.ssm_state, cfg.ssm_conv, cfg.dt_rank, jnp.float32)
+    xz = jax.random.normal(jax.random.PRNGKey(1), (2, 21, cfg.d_inner))
+    y, h = selective_scan(p, xz, cfg.ssm_state, cfg.dt_rank, chunk=8)
+
+    # sequential oracle
+    dA, dBu, Cc = _ssm_coeffs(p, xz, cfg.ssm_state, cfg.dt_rank)
+    hh = jnp.zeros((2, cfg.d_inner, cfg.ssm_state))
+    ys = []
+    for t in range(21):
+        hh = dA[:, t] * hh + dBu[:, t]
+        ys.append(jnp.einsum("bdn,bn->bd", hh, Cc[:, t])
+                  + p["D"] * xz[:, t])
+    y_ref = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hh), atol=1e-4,
+                               rtol=1e-3)
+
+
+def test_mamba_chunk_invariance_with_padding():
+    cfg8 = _mamba_cfg(chunk=8)
+    cfg64 = _mamba_cfg(chunk=64)
+    p = mamba_init(jax.random.PRNGKey(0), 32, cfg8.d_inner, cfg8.ssm_state,
+                   cfg8.ssm_conv, cfg8.dt_rank, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 19, 32))
+    y8, c8 = mamba_apply(p, x, cfg8)
+    y64, c64 = mamba_apply(p, x, cfg64)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y64), atol=1e-4,
+                               rtol=1e-3)
+    # carried state must not be decayed by padding (identity transitions)
+    np.testing.assert_allclose(np.asarray(c8["h"]), np.asarray(c64["h"]),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_slstm_streaming_consistency():
+    cfg = ArchConfig(name="t", arch_type="ssm", num_layers=1, d_model=32,
+                     num_heads=4, num_kv_heads=4, d_ff=0, vocab_size=64,
+                     pattern=(LayerSpec(mixer="slstm", ffn="none"),))
+    p = slstm_init(jax.random.PRNGKey(0), 32, 4, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 32))
+    y_full, _ = slstm_apply(p, x, cfg)
+    y1, cache = slstm_apply(p, x[:, :11], cfg)
+    y2, _ = slstm_apply(p, x[:, 11:], cfg, cache=cache)
+    np.testing.assert_allclose(np.asarray(y_full[:, :11]), np.asarray(y1),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_full[:, 11:]), np.asarray(y2),
+                               atol=1e-5)
+
+
+def test_mlstm_block_streaming_consistency():
+    cfg = ArchConfig(name="t", arch_type="ssm", num_layers=1, d_model=32,
+                     num_heads=2, num_kv_heads=2, d_ff=0, vocab_size=64,
+                     pattern=(LayerSpec(mixer="mlstm", ffn="none"),),
+                     mlstm_chunk=8)
+    p = mlstm_init(jax.random.PRNGKey(0), 32, 2, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 32))
+    y_full, _ = mlstm_apply(p, x, cfg)
+    y1, cache = mlstm_apply(p, x[:, :16], cfg)
+    y2, _ = mlstm_apply(p, x[:, 16:17], cfg, cache=cache)
+    np.testing.assert_allclose(np.asarray(y_full[:, :16]), np.asarray(y1),
+                               atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(y_full[:, 16]), np.asarray(y2[:, 0]),
+                               atol=2e-4, rtol=2e-3)

@@ -1,0 +1,105 @@
+"""Sharding-rule unit tests (mesh-shape logic only — the real 256/512-device
+lowering is exercised by the dry-run; test_dist_lowering.py runs a small
+subprocess version on 8 fake devices)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.dist import sharding_rules as sr
+from repro.models import transformer as tfm
+
+
+class FakeMesh:
+    """Duck-typed mesh: axis_names + shape dict (no devices needed)."""
+    def __init__(self, shape: dict):
+        self.axis_names = tuple(shape)
+        self.shape = dict(shape)
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+@settings(deadline=None, max_examples=50)
+@given(dim=st.integers(1, 4096), seed=st.integers(0, 3))
+def test_fit_dim_always_divides(dim, seed):
+    axes_opts = [("model",), ("data",), ("pod", "data"), ("data", "model")]
+    axes = axes_opts[seed]
+    fitted = sr._fit_dim(dim, tuple(a for a in axes if a in MESH2.shape),
+                         MESH2)
+    if fitted is not None:
+        names = fitted if isinstance(fitted, tuple) else (fitted,)
+        size = int(np.prod([MESH2.shape[a] for a in names]))
+        assert dim % size == 0
+
+
+def test_fit_spec_drops_pod_first():
+    # 16 divisible by data(16) but not pod*data(32)
+    spec = sr.fit_spec((16, 64), (sr.FSDP, "model"), MESH2)
+    assert spec == P("data", "model")
+
+
+def test_fit_spec_no_axis_reuse():
+    # both dims want "model": second occurrence must not reuse it
+    spec = sr.fit_spec((32, 32), ("model", "model"), MESH1)
+    assert spec == P("model", None)
+
+
+@pytest.mark.parametrize("mesh", [MESH1, MESH2], ids=["pod1", "pod2"])
+@pytest.mark.parametrize("arch", ["llama3-405b", "kimi-k2-1t-a32b",
+                                  "jamba-v0.1-52b", "xlstm-125m",
+                                  "whisper-tiny", "gemma2-9b"])
+def test_param_specs_cover_all_leaves(arch, mesh):
+    cfg = get_config(arch).replace(param_dtype="bfloat16",
+                                   compute_dtype="bfloat16")
+    shapes = jax.eval_shape(lambda k: tfm.init_params(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = sr.param_specs(shapes, mesh)
+    flat_sh = jax.tree.leaves(shapes)
+    flat_sp = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_sh) == len(flat_sp)
+    for sh, sp in zip(flat_sh, flat_sp):
+        for dim, part in zip(sh.shape, tuple(sp) + (None,) * 10):
+            if part is None:
+                continue
+            names = part if isinstance(part, tuple) else (part,)
+            size = int(np.prod([mesh.shape[a] for a in names]))
+            assert dim % size == 0, (arch, sh.shape, sp)
+
+
+def test_big_weights_are_sharded_on_both_axes():
+    cfg = get_config("llama3-405b")
+    shapes = jax.eval_shape(lambda k: tfm.init_params(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = sr.param_specs(shapes, MESH1)
+    wq = specs["layers"]["b0"]["attn"]["wq"]
+    assert wq == P(None, "data", "model")       # (periods, d, H*hd)
+    emb = specs["embed"]
+    assert emb == P("model", "data")
+
+
+def test_moe_expert_weights_expert_parallel():
+    cfg = get_config("kimi-k2-1t-a32b")
+    shapes = jax.eval_shape(lambda k: tfm.init_params(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = sr.param_specs(shapes, MESH1)
+    wg = specs["layers"]["b0"]["moe"]["w_gate"]
+    assert wg == P(None, "data", None, "model")  # (periods, E, d, ff)
+
+
+def test_batch_specs_fallback_batch_one():
+    batch = {"tokens": jax.ShapeDtypeStruct((1, 524288), jnp.int32)}
+    specs = sr.batch_specs(batch, MESH1)
+    assert specs["tokens"] == P(None, None)      # batch 1 -> replicated
+
+
+def test_cache_specs_head_dim_model_sharded():
+    cache = {"b0": {"mixer": {
+        "k": jax.ShapeDtypeStruct((4, 128, 1024, 8, 128), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((4, 128, 1024, 8, 128), jnp.bfloat16)}}}
+    specs = sr.cache_specs(cache, MESH1)
+    assert specs["b0"]["mixer"]["k"] == P(None, "data", None, None, "model")

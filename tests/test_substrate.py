@@ -1,0 +1,150 @@
+"""Substrate tests: data partitioners, optimizers, checkpointing, pytree
+utils, serving glue."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.data import (SyntheticImageConfig, make_synthetic_images,
+                        make_token_dataset, partition_iid, partition_noniid)
+from repro.data.synthetic import label_histogram
+from repro.optim import adamw, cosine_schedule, inverse_time_schedule, sgd, sgd_momentum
+from repro.training.serve import _ring_order
+from repro.utils import (tree_flatten_vector, tree_unflatten_vector,
+                         tree_sq_norm)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_synthetic_images_learnable_shapes():
+    cfg = SyntheticImageConfig.mnist_like(num_train=2000, num_test=500)
+    (xtr, ytr), (xte, yte) = make_synthetic_images(jax.random.PRNGKey(0), cfg)
+    assert xtr.shape == (2000, 28, 28, 1) and yte.shape == (500,)
+    assert int(ytr.min()) >= 0 and int(ytr.max()) <= 9
+
+
+def test_partition_iid_shapes_and_coverage():
+    x = jnp.arange(100.0)[:, None]
+    y = (jnp.arange(100) % 10).astype(jnp.int32)
+    xs, ys = partition_iid(jax.random.PRNGKey(0), x, y, 10)
+    assert xs.shape == (10, 10, 1)
+    # all samples used exactly once
+    assert len(set(np.asarray(xs).ravel().tolist())) == 100
+
+
+def test_partition_noniid_label_concentration():
+    """Paper §V: each client sees few classes after label-sorted sharding."""
+    n = 2000
+    y = (jnp.arange(n) % 10).astype(jnp.int32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, 4))
+    xs, ys = partition_noniid(jax.random.PRNGKey(2), x, y, num_clients=20,
+                              shards_per_client=4, num_shards=200)
+    hist = label_histogram(ys, 10)
+    classes_per_client = (hist > 0).sum(axis=1)
+    assert classes_per_client.max() <= 5   # ≤ shards_per_client (+ boundary)
+    iid_xs, iid_ys = partition_iid(jax.random.PRNGKey(3), x, y, 20)
+    iid_hist = label_histogram(iid_ys, 10)
+    assert (iid_hist > 0).sum(axis=1).min() >= 8
+
+
+def test_token_dataset_markov_structure():
+    toks = make_token_dataset(jax.random.PRNGKey(0), vocab_size=64,
+                              num_sequences=8, seq_len=100, branching=4)
+    assert toks.shape == (8, 101)
+    assert int(toks.max()) < 64 and int(toks.min()) >= 0
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def _quad_min(opt, steps=200):
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(steps):
+        grads = jax.tree.map(lambda p: 2 * p, params)   # f = ||x||²
+        updates, state = opt.update(grads, state, params)
+        params = jax.tree.map(jnp.add, params, updates)
+    return float(jnp.sum(params["x"] ** 2))
+
+
+def test_sgd_minimizes_quadratic():
+    assert _quad_min(sgd(0.1)) < 1e-6
+
+
+def test_momentum_minimizes_quadratic():
+    assert _quad_min(sgd_momentum(0.05, 0.9)) < 1e-6
+
+
+def test_adamw_minimizes_quadratic():
+    assert _quad_min(adamw(0.1)) < 1e-3
+
+
+def test_inverse_time_schedule_matches_theorem():
+    sched = inverse_time_schedule(mu=2.0, gamma=10.0)
+    np.testing.assert_allclose(float(sched(jnp.asarray(0.0))), 2 / (2 * 10))
+    np.testing.assert_allclose(float(sched(jnp.asarray(10.0))), 2 / (2 * 20))
+
+
+def test_cosine_schedule_endpoints():
+    sched = cosine_schedule(1.0, 100, warmup=10)
+    assert float(sched(jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(sched(jnp.asarray(10))), 1.0, rtol=1e-5)
+    assert float(sched(jnp.asarray(100))) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.asarray([1, 2, 3], jnp.int32)}}
+    save_checkpoint(tmp_path, 7, tree)
+    save_checkpoint(tmp_path, 12, jax.tree.map(lambda x: x + 1, tree))
+    assert latest_step(tmp_path) == 12
+    out = load_checkpoint(tmp_path, tree)            # loads latest
+    np.testing.assert_allclose(np.asarray(out["a"]),
+                               np.asarray(tree["a"] + 1))
+    out7 = load_checkpoint(tmp_path, tree, step=7)
+    np.testing.assert_allclose(np.asarray(out7["b"]["c"]),
+                               np.asarray(tree["b"]["c"]))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    save_checkpoint(tmp_path, 1, {"a": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        load_checkpoint(tmp_path, {"a": jnp.zeros((3, 3))})
+
+
+# ---------------------------------------------------------------------------
+# pytree utils + serving glue
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 1000))
+def test_flatten_roundtrip(seed):
+    key = jax.random.PRNGKey(seed)
+    tree = {"w": jax.random.normal(key, (3, 4)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (7,)),
+            "n": {"s": jax.random.normal(jax.random.fold_in(key, 2), (2, 2, 2))}}
+    vec = tree_flatten_vector(tree)
+    assert vec.shape == (3 * 4 + 7 + 8,)
+    back = tree_unflatten_vector(vec, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+@settings(deadline=None, max_examples=30)
+@given(S=st.integers(1, 300), W=st.integers(1, 64))
+def test_ring_order_property(S, W):
+    """Ring slot j holds the newest position p ≤ S-1 with p ≡ j (mod W)."""
+    idx = _ring_order(S, W)
+    for j, p in enumerate(idx):
+        assert p % W == j % W or p < 0
+        assert p <= S - 1
+        assert p > S - 1 - W
