@@ -30,6 +30,7 @@ def main():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=0.3)
     ap.add_argument("--snr-db", type=float, default=40.0)
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
@@ -55,15 +56,15 @@ def main():
     print(f"CWFL plan: {args.clients} clients, clusters="
           f"{plan.assignment.tolist()}, channel-noise std={plan.noise_std:.2e}")
 
-    step_fn, _, _ = ds.make_train_step(cfg, shape, mesh, plan=plan, lr=3e-3,
-                                       microbatches=1)
+    step_fn, _, _ = ds.make_train_step(cfg, shape, mesh, plan=plan,
+                                       lr=args.lr, microbatches=1)
     step_fn = jax.jit(step_fn)
 
     data = make_token_dataset(jax.random.PRNGKey(1), cfg.vocab_size,
                               num_sequences=4096, seq_len=args.seq)
     params = init_params(jax.random.PRNGKey(2), cfg)
     from repro.optim import sgd
-    opt_state = sgd(3e-3).init(params)
+    opt_state = sgd(args.lr).init(params)
 
     key = jax.random.PRNGKey(3)
     t0 = time.time()

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import channel as ch
-from repro.core.cwfl import _mix_rows, _per_client_sq_norm
+from repro.core.cwfl import _mix_rows, per_client_mean_sq
 from repro.core.topology import Topology
 
 
@@ -78,10 +78,10 @@ def cotaf_aggregate(stacked_params, state: COTAFState, key: jax.Array,
     K = jax.tree.leaves(stacked_params)[0].shape[0]
     p = jnp.sqrt(state.client_power / state.total_power)          # (K,)
     if precode:
-        sq = _per_client_sq_norm(stacked_params)
-        pre = jnp.sqrt(ch.precoding_factor(state.client_power, sq)
-                       / jnp.maximum(state.client_power, 1e-12))
-        p = p * pre
+        # eq. (5) on the per-channel-use mean square (DESIGN.md §1) — same
+        # estimator + amplitude as CWFL's precode_scale, without heads.
+        p = p * ch.precode_amplitude(state.client_power,
+                                     per_client_mean_sq(stacked_params))
     A = p[None, :]                                                # (1, K)
     eff_std = (state.noise_std / jnp.sqrt(state.total_power))[None]
     if normalize:

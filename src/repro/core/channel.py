@@ -63,6 +63,18 @@ def precoding_factor(p_k: jnp.ndarray, theta_sq_norm: jnp.ndarray) -> jnp.ndarra
     return jnp.minimum(p_k, p_k / jnp.maximum(theta_sq_norm, 1.0))
 
 
+def precode_amplitude(p_k: jnp.ndarray, mean_sq_norm: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (5) amplitude scale ``sqrt(P_k^t / P_k) ≤ 1``.
+
+    ``mean_sq_norm`` is the per-CHANNEL-USE signal power E‖θ_k‖²/d (one
+    parameter per channel use) — the estimator of eq. (5)'s E‖θ_k^t‖²
+    shared by CWFL and COTAF (see DESIGN.md §1 for why the total d-dim
+    norm is the wrong estimator).
+    """
+    return jnp.sqrt(precoding_factor(p_k, mean_sq_norm)
+                    / jnp.maximum(p_k, 1e-12))
+
+
 def ota_mac(signals: jnp.ndarray, amplitudes: jnp.ndarray, mask: jnp.ndarray,
             key: jax.Array, noise_std: float | jnp.ndarray) -> jnp.ndarray:
     """Noisy superposition MAC (eq. 4 after channel inversion).

@@ -24,6 +24,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import channel as ch
 from repro.core import clustering as cl
@@ -101,6 +102,24 @@ def _per_client_sq_norm(stacked) -> jnp.ndarray:
     )
 
 
+def _per_client_dim(stacked) -> int:
+    """d = dim(θ_k): number of scalars per client (= channel uses per sync)."""
+    return sum(int(np.prod(x.shape[1:])) for x in jax.tree.leaves(stacked))
+
+
+def per_client_mean_sq(stacked) -> jnp.ndarray:
+    """(K,) per-channel-use signal power ‖θ_k‖²/d — eq. (5)'s estimator."""
+    return _per_client_sq_norm(stacked) / max(_per_client_dim(stacked), 1)
+
+
+def precode_scale(state: CWFLState, mean_sq_norm: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (5) amplitude scale per client (channel.precode_amplitude), with
+    heads exempt — they are virtual clients whose local contribution never
+    crosses the channel."""
+    pre = ch.precode_amplitude(state.client_power, mean_sq_norm)
+    return jnp.where(state.plan.head_mask > 0, 1.0, pre)
+
+
 def _mix_rows(weights: jnp.ndarray, stacked, key: Optional[jax.Array],
               noise_std_per_row: Optional[jnp.ndarray]):
     """out[r] = Σ_k weights[r, k] · stacked[k]  (+ N(0, std_r²) per element).
@@ -134,6 +153,22 @@ def phase1_weights(state: CWFLState) -> jnp.ndarray:
     return state.plan.membership * w_k[None, :]
 
 
+def phase2_weights(state: CWFLState, normalize: bool = True):
+    """(C, C) inter-head mix ``B = W + I`` and (C,) equivalent per-receiver
+    noise std κ_c = sqrt(Σ_j W(c,j)²)·σ̃ (eq. 9 / lemma 2 with independent
+    per-link noise; the self-link is local and noiseless).  With
+    ``normalize`` both are renormalized by the row sums (convex-combination
+    mode, DESIGN.md §1)."""
+    b = state.mix + jnp.eye(state.num_clusters)
+    eff_std2 = state.consensus_noise_std / jnp.sqrt(state.total_power)
+    kappa = jnp.sqrt(jnp.sum(state.mix ** 2, axis=1)) * eff_std2
+    if normalize:
+        row_sums = b.sum(axis=1, keepdims=True)
+        b = b / row_sums
+        kappa = kappa / row_sums[:, 0]
+    return b, kappa
+
+
 def aggregate(stacked_params, state: CWFLState, key: jax.Array,
               normalize: bool = True, precode: bool = True):
     """One CWFL sync round. Returns (new_stacked_params, consensus_mean).
@@ -149,15 +184,11 @@ def aggregate(stacked_params, state: CWFLState, key: jax.Array,
     k1, k2 = jax.random.split(key)
     A = phase1_weights(state)                                    # (C, K)
 
-    # eq. (5): clients whose ‖θ‖² exceeds 1 scale down to meet E‖x‖² ≤ P_k.
+    # eq. (5): clients whose per-symbol power E‖θ‖²/d exceeds 1 scale down
+    # to meet E‖x‖² ≤ P_k (precode_scale — per channel use, DESIGN.md §1).
     if precode:
-        sq = _per_client_sq_norm(stacked_params)                 # (K,)
-        pre = jnp.sqrt(
-            ch.precoding_factor(state.client_power, sq)
-            / jnp.maximum(state.client_power, 1e-12))            # (K,) ≤ 1
-        # Heads (virtual clients) are noiseless/local: no precoding.
-        pre = jnp.where(state.plan.head_mask > 0, 1.0, pre)
-        A = A * pre[None, :]
+        A = A * precode_scale(state,
+                              per_client_mean_sq(stacked_params))[None, :]
 
     # Phase 1: OTA superposition at each head + receiver AWGN, scaled by
     # 1/sqrt(P) at the receiver (eq. 8) -> effective noise std σ_c/sqrt(P).
@@ -171,15 +202,7 @@ def aggregate(stacked_params, state: CWFLState, key: jax.Array,
 
     # Phase 2: heads exchange θ̃ over C(C-1) channel uses; receiver c mixes
     # with SNR weights W(c, j) plus its own θ̃_c (eq. 9, lemma 2).
-    B = state.mix + jnp.eye(state.num_clusters)
-    eff_std2 = state.consensus_noise_std / jnp.sqrt(state.total_power)
-    # per-row effective noise: κ_c = sqrt(Σ_j W(c,j)²) · σ̃ (lemma 2 with
-    # independent per-link noise); self-link is local, no noise.
-    kappa = jnp.sqrt(jnp.sum(state.mix**2, axis=1)) * eff_std2
-    if normalize:
-        row_sums = B.sum(axis=1, keepdims=True)
-        B = B / row_sums
-        kappa = kappa / row_sums[:, 0]  # same renormalization applied to noise
+    B, kappa = phase2_weights(state, normalize)
     theta_bar = _mix_rows(B, theta_tilde, k2, kappa)
 
     # Phase 3: error-free downlink broadcast θ_k ← θ̄_{c(k)}.

@@ -1,0 +1,214 @@
+"""CWFL ⇄ production-training integration: the offline FL plan and the
+paper-faithful hierarchical OTA collective.
+
+Shard mode (DESIGN.md §3): one sharded model copy; clients are groups of
+examples in the global batch.  Because per-example losses enter the total
+loss linearly, the gradient of the β-weighted mean loss equals the
+β-weighted consensus of per-client gradients — so CWFL's Algorithm 1
+reduces to (a) per-example loss weights ``example_weights`` and (b) a
+post-backward channel-noise injection ``add_channel_noise`` whose std is
+the consensus-noise budget of the two-phase collective.
+
+Replica / mesh-collective mode: ``hierarchical_ota_allreduce`` runs the
+two OTA phases literally inside ``jax.shard_map`` over the ``data`` axis —
+phase 1 is an intra-cluster OTA MAC (a masked, amplitude-weighted ``psum``),
+phase 2 the inter-head consensus mix — returning the receiver-independent
+consensus mean on every client rank.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cwfl
+from repro.core.cwfl import CWFLState
+from repro.core.topology import TopologyConfig, make_topology
+from repro.utils import tree_add_noise
+
+
+@dataclasses.dataclass(frozen=True)
+class FLPlan:
+    """Everything the training step needs from the offline FL phase.
+
+    ``beta`` is the water-filling-derived client distribution (Σβ = 1):
+    the *effective* weight of client k's signal in the collective's
+    consensus output, β_k = Σ_c colmean(B)_c · Ã_{c,k}, where Ã is the
+    row-normalized phase-1 amplitude matrix (sqrt(P_k/P) for members, 1
+    for heads) and B the normalized consensus mix — so shard mode's
+    weighted loss optimizes the same weighted objective the hierarchical
+    collective aggregates.  ``noise_std`` is the std of the
+    consensus-mean channel noise per sync (the Q₂ term of Theorem 1);
+    ``phase1_rel_std`` / ``phase2_rel_std`` are the per-cluster per-phase
+    noise stds *per unit* ``noise_std`` so that rescaling (or zeroing)
+    ``noise_std`` rescales the whole collective consistently.
+    """
+
+    num_clients: int
+    num_clusters: int
+    beta: np.ndarray              # (K,) water-filled client weights, Σ = 1
+    assignment: np.ndarray        # (K,) cluster id per client
+    heads: np.ndarray             # (C,) head client index per cluster
+    mix: np.ndarray               # (C, C) inter-head weights W (diag = 0)
+    cluster_weights: np.ndarray   # (C, C) row-normalized (W + I)
+    noise_std: float              # consensus-mean channel noise std
+    phase1_rel_std: np.ndarray    # (C,) θ̃ noise std / noise_std
+    phase2_rel_std: np.ndarray    # (C,) head-exchange noise std / noise_std
+    snr_db: float
+    state: CWFLState              # full Algorithm-1 state (replica mode)
+
+    def client_of_example(self, n: int) -> np.ndarray:
+        """(n,) client id per example: contiguous, balanced blocks."""
+        return (np.arange(n) * self.num_clients) // n
+
+    def example_weights(self, n: int) -> np.ndarray:
+        """(n,) loss weights with mean 1 implementing the weighted-loss ⇔
+        explicit-consensus equivalence (DESIGN.md §3): the gradient of
+        mean(w · per-example-loss) equals Σ_k β_k ∇ mean_k(loss).
+
+        If the batch is smaller than the client count, β is renormalized
+        over the clients actually present so the mean-1 invariant (and
+        the equivalence, restricted to present clients) still holds; if
+        every present client has zero water-filled β, the weights fall
+        back to uniform rather than silently zeroing the gradient."""
+        c = self.client_of_example(n)
+        counts = np.bincount(c, minlength=self.num_clients)
+        beta = self.beta
+        if n < self.num_clients:
+            present = counts > 0
+            mass = beta[present].sum()
+            if mass <= 0.0:
+                return np.ones((n,), beta.dtype)
+            beta = beta * present / mass
+        return n * beta[c] / counts[c]
+
+
+def make_fl_plan(num_clients: int, num_clusters: int, key: jax.Array,
+                 snr_db: float = 40.0) -> FLPlan:
+    """Offline phase: draw a topology, cluster on SNR, water-fill power,
+    and precompute the consensus-noise budget for the online collective."""
+    k_topo, k_setup = jax.random.split(key)
+    topo = make_topology(
+        k_topo, TopologyConfig(num_clients=num_clients,
+                               num_hotspots=max(min(num_clusters,
+                                                    num_clients), 1)))
+    # K-means may leave clusters empty for small K (all clients at one
+    # hotspot); an empty cluster has a zero phase-1 row whose receiver
+    # renormalization explodes the noise budget. Retry with the achieved
+    # number of non-empty clusters until every cluster has members.
+    c_req = max(min(num_clusters, num_clients), 1)
+    while True:
+        state = cwfl.setup(
+            topo, cwfl.CWFLConfig(num_clusters=c_req, snr_db=snr_db),
+            k_setup)
+        sizes = np.bincount(np.asarray(state.plan.assignment),
+                            minlength=c_req)
+        if c_req == 1 or (sizes > 0).all():
+            break
+        c_req = max(int((sizes > 0).sum()), 1)
+
+    # Phase-1 effective noise after receiver scaling + row normalization
+    # (same renormalization as cwfl.aggregate with normalize=True).  Uses
+    # the state's per-cluster receiver stds rather than re-deriving from
+    # snr_db, so the budget tracks whatever setup() assigned.
+    A = np.asarray(cwfl.phase1_weights(state), np.float64)
+    row_a = np.maximum(A.sum(axis=1), 1e-12)
+    a_norm = A / row_a[:, None]
+    s1 = (np.asarray(state.head_noise_std, np.float64)
+          / np.sqrt(state.total_power) / row_a)                # (C,)
+
+    b_norm_j, s2_j = cwfl.phase2_weights(state)
+    b_norm = np.asarray(b_norm_j, np.float64)
+    s2 = np.asarray(s2_j, np.float64)                          # (C,)
+    C = b_norm.shape[0]
+
+    # Effective per-client consensus weight of the collective (see FLPlan
+    # docstring) — shard mode weights losses with exactly these.
+    col_mean = b_norm.mean(axis=0)
+    beta = col_mean @ a_norm
+    beta = beta / max(beta.sum(), 1e-12)
+
+    # Std of the consensus mean: the phase-1 noise of cluster j reaches the
+    # mean with coefficient colmean(b_norm)_j; phase-2 noise averages 1/C.
+    var = float((col_mean ** 2 * s1 ** 2).sum() + (s2 ** 2).sum() / C ** 2)
+    noise_std = float(np.sqrt(var))
+    denom = max(noise_std, 1e-30)
+
+    return FLPlan(
+        num_clients=num_clients,
+        num_clusters=C,
+        beta=beta,
+        assignment=np.asarray(state.plan.assignment),
+        heads=np.asarray(state.plan.heads),
+        mix=np.asarray(state.mix),
+        cluster_weights=b_norm,
+        noise_std=noise_std,
+        phase1_rel_std=s1 / denom,
+        phase2_rel_std=s2 / denom,
+        snr_db=float(snr_db),
+        state=state,
+    )
+
+
+def add_channel_noise(grads, key: jax.Array, noise_std):
+    """Post-backward channel-noise injection (shard mode).  A static zero
+    std is a no-op so the noiseless path adds no PRNG work to the HLO."""
+    if isinstance(noise_std, (int, float)) and noise_std <= 0.0:
+        return grads
+    return tree_add_noise(grads, key, noise_std)
+
+
+def hierarchical_ota_allreduce(x: jax.Array, plan: FLPlan, key: jax.Array,
+                               axis_name: str = "data") -> jax.Array:
+    """The paper-faithful two-phase collective, inside ``jax.shard_map``.
+
+    Each rank along ``axis_name`` is one client (axis size must equal
+    ``plan.num_clients``); ``x`` is that client's local value (any shape).
+
+    Phase 1 (eq. 8): every cluster-head receives the OTA superposition of
+    its members' amplitude-weighted signals — a masked ``psum`` with the
+    row-normalized phase-1 weights — plus receiver AWGN.
+    Phase 2 (eq. 9 / lemma 2): heads exchange θ̃ and mix with the
+    row-normalized SNR weights, plus per-link AWGN.
+    Phase 3: error-free broadcast.  The receiver-independent consensus mean
+    is returned identically on every rank (noise keys are shared, so all
+    ranks see the same channel realization — the broadcast equality of the
+    paper holds exactly).
+    """
+    axis_size = jax.lax.psum(1, axis_name)
+    if isinstance(axis_size, int) and axis_size != plan.num_clients:
+        # the per-rank weight-column lookup below clamps out-of-range
+        # indices — a silent wrong answer without this check.
+        raise ValueError(
+            f"plan has {plan.num_clients} clients but axis "
+            f"{axis_name!r} has {axis_size} ranks; one client per rank")
+
+    a = jnp.asarray(cwfl.phase1_weights(plan.state), jnp.float32)
+    a = a / jnp.maximum(a.sum(axis=1, keepdims=True), 1e-12)
+    b_norm = jnp.asarray(plan.cluster_weights, jnp.float32)
+    c = a.shape[0]
+
+    k = jax.lax.axis_index(axis_name)
+    col = jax.lax.dynamic_index_in_dim(a, k, axis=1, keepdims=False)  # (C,)
+    xf = x.astype(jnp.float32)
+    contrib = col.reshape((c,) + (1,) * xf.ndim) * xf[None]
+
+    # Phase 1: OTA MAC — the superposition over clients IS the psum.
+    theta_tilde = jax.lax.psum(contrib, axis_name)            # (C,) + x.shape
+    k1, k2 = jax.random.split(key)
+    std1 = plan.noise_std * jnp.asarray(plan.phase1_rel_std, jnp.float32)
+    theta_tilde = theta_tilde + std1.reshape(
+        (c,) + (1,) * xf.ndim) * jax.random.normal(k1, theta_tilde.shape,
+                                                   jnp.float32)
+
+    # Phase 2: inter-head consensus mix + equivalent per-receiver noise.
+    theta_bar = jnp.tensordot(b_norm, theta_tilde, axes=1)
+    std2 = plan.noise_std * jnp.asarray(plan.phase2_rel_std, jnp.float32)
+    theta_bar = theta_bar + std2.reshape(
+        (c,) + (1,) * xf.ndim) * jax.random.normal(k2, theta_bar.shape,
+                                                   jnp.float32)
+
+    # Phase 3: error-free broadcast of the consensus mean.
+    return jnp.mean(theta_bar, axis=0).astype(x.dtype)

@@ -1,0 +1,141 @@
+"""Flat-vector / shard_map lowerings of the CWFL aggregation.
+
+Two entry families:
+
+* ``phase1_ota_flat`` / ``cwfl_aggregate_flat`` — Algorithm 1 on a flat
+  ``(K, d)`` client-signal matrix.  The channel math (eq. 5 precoding,
+  eq. 8 receiver scaling, lemma-2 noise) is the *same code* the reference
+  operator :func:`repro.core.cwfl.aggregate` uses; the phase-1 MAC —
+  ``W @ S + N`` over the d-dimensional flattened parameters, the per-round
+  hot spot — is routed through the Pallas ``ota_aggregate`` kernel when the
+  vector is large enough to benefit (``d >= PALLAS_MIN_DIM``).
+* ``ota_allreduce_tree`` / ``build_gradient_allreduce`` — the device
+  collective: the hierarchical two-phase OTA all-reduce applied to
+  gradient/parameter pytrees across the mesh's ``data`` axis (one client
+  per data rank), either inside an existing ``jax.shard_map`` body or as a
+  standalone jitted collective.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cwfl
+from repro.core.cwfl import CWFLState
+from repro.dist.fl_integration import FLPlan, hierarchical_ota_allreduce
+from repro.kernels.ota_aggregate import DEFAULT_TILE
+from repro.kernels.ota_aggregate import ota_aggregate as _pallas_ota
+from repro.kernels.ref import ota_aggregate_ref
+from repro.utils import tree_flatten_vector, tree_unflatten_vector
+
+# Below this flat dimension the (C, K) matmul is too small for the kernel's
+# tile machinery to pay off; the jnp reference is a single fused matmul.
+PALLAS_MIN_DIM = 512
+
+
+def phase1_ota_flat(signals: jnp.ndarray, state: CWFLState, key: jax.Array,
+                    *, normalize: bool = True, precode: bool = True,
+                    tile: int = DEFAULT_TILE,
+                    interpret: Optional[bool] = None,
+                    use_pallas: Optional[bool] = None) -> jnp.ndarray:
+    """Phase-1 OTA MAC on flat vectors: ``(K, d) -> (C, d)`` (eq. 8).
+
+    Matches :func:`repro.core.cwfl.aggregate`'s phase 1 leaf-for-leaf when
+    the pytree is flattened to one vector per client.  ``interpret``
+    defaults to the Pallas interpreter off-TPU (CPU validation) and the
+    compiled kernel on TPU.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    _, d = signals.shape
+    sig32 = signals.astype(jnp.float32)
+    a = cwfl.phase1_weights(state)
+    if precode:
+        mean_sq = jnp.mean(jnp.square(sig32), axis=1)          # E‖θ‖²/use
+        a = a * cwfl.precode_scale(state, mean_sq)[None, :]
+    eff_std = state.head_noise_std / jnp.sqrt(state.total_power)
+    if normalize:
+        rows = jnp.maximum(a.sum(axis=1, keepdims=True), 1e-12)
+        a = a / rows
+        eff_std = eff_std / rows[:, 0]
+    noise = eff_std[:, None] * jax.random.normal(
+        key, (a.shape[0], d), jnp.float32)
+    if use_pallas is None:
+        use_pallas = d >= PALLAS_MIN_DIM
+    if use_pallas:
+        return _pallas_ota(sig32, a, noise, tile=tile, interpret=interpret)
+    return ota_aggregate_ref(sig32, a, noise)
+
+
+def cwfl_aggregate_flat(signals: jnp.ndarray, state: CWFLState,
+                        key: jax.Array, *, normalize: bool = True,
+                        precode: bool = True, tile: int = DEFAULT_TILE,
+                        interpret: Optional[bool] = None,
+                        use_pallas: Optional[bool] = None):
+    """Full Algorithm 1 on a flat ``(K, d)`` matrix.
+
+    Returns ``(new_signals (K, d), consensus (d,))`` — the flat-vector twin
+    of :func:`repro.core.cwfl.aggregate` (exactly equal in the noiseless
+    case; noise keys are split differently per leaf in the pytree path).
+    """
+    k1, k2 = jax.random.split(key)
+    theta_tilde = phase1_ota_flat(signals, state, k1, normalize=normalize,
+                                  precode=precode, tile=tile,
+                                  interpret=interpret, use_pallas=use_pallas)
+
+    b, kappa = cwfl.phase2_weights(state, normalize)
+    theta_bar = b @ theta_tilde + kappa[:, None] * jax.random.normal(
+        k2, theta_tilde.shape, jnp.float32)
+
+    new = (state.plan.membership.T @ theta_bar).astype(signals.dtype)
+    consensus = jnp.mean(theta_bar, axis=0)
+    return new, consensus
+
+
+# ---------------------------------------------------------------------------
+# Device collectives (shard_map over the data axis).
+# ---------------------------------------------------------------------------
+
+def ota_allreduce_tree(tree, plan: FLPlan, key: jax.Array,
+                       axis_name: str = "data"):
+    """Aggregate a local gradient/parameter pytree across ``axis_name`` with
+    the hierarchical OTA collective.  Call INSIDE a ``jax.shard_map`` body;
+    every rank returns the identical consensus tree."""
+    flat = tree_flatten_vector(tree)
+    out = hierarchical_ota_allreduce(flat, plan, key, axis_name)
+    return tree_unflatten_vector(out, tree)
+
+
+def build_gradient_allreduce(mesh, plan: FLPlan, axis_name: str = "data"):
+    """Standalone jitted collective over K-stacked client pytrees.
+
+    The returned ``agg(stacked_tree, key)`` maps leaves ``(K, ...)`` (client
+    axis sharded over ``axis_name``; K must equal the axis size) to the
+    same-shaped tree where every client slice holds the OTA consensus.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    axis_size = dict(mesh.shape)[axis_name]
+    if axis_size != plan.num_clients:
+        # the per-rank weight-column lookup clamps out-of-range indices —
+        # a silent wrong answer without this check.
+        raise ValueError(
+            f"plan has {plan.num_clients} clients but mesh axis "
+            f"{axis_name!r} has {axis_size} ranks; one client per rank")
+
+    def agg(stacked_tree, key):
+        def body(local_tree, key):
+            local = jax.tree.map(lambda x: x[0], local_tree)
+            out = ota_allreduce_tree(local, plan, key, axis_name)
+            return jax.tree.map(lambda x: x[None], out)
+
+        from repro.dist import shard_map
+
+        specs = jax.tree.map(lambda _: P(axis_name), stacked_tree)
+        f = shard_map(body, mesh=mesh, in_specs=(specs, P()),
+                      out_specs=specs)
+        return f(stacked_tree, key)
+
+    return jax.jit(agg)

@@ -1,0 +1,161 @@
+"""Mesh-shape-aware PartitionSpec inference for the production mesh.
+
+The production meshes are (data, model) = (16, 16) or (pod, data, model) =
+(2, 16, 16); tests run on small fake meshes.  Rather than hand-writing a
+spec per parameter per mesh, every rule here is *fitted* to the mesh shape:
+
+* ``FSDP`` / ``BATCH`` are axis **aliases** that expand to the fully-sharded
+  axis group of the current mesh (``("pod", "data")`` when a pod axis
+  exists, else ``("data",)``).
+* ``_fit_dim`` drops leading axes (pod first) until the remaining axis
+  group's size divides the dimension — a dim that nothing divides stays
+  replicated instead of erroring.
+* ``fit_spec`` additionally guarantees an axis is never reused across dims
+  of one leaf (XLA rejects duplicate mesh axes in a PartitionSpec).
+
+``param_specs`` / ``batch_specs`` / ``cache_specs`` apply these rules to
+every leaf of the model parameter / input-batch / decode-cache pytrees; the
+coverage across all assigned architectures is pinned by
+``tests/test_sharding_rules.py``.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Axis aliases, resolved against the mesh at fit time.
+FSDP = "__fsdp__"     # fully-sharded parameter dim: ("pod", "data")
+BATCH = "__batch__"   # data-parallel batch dim:     ("pod", "data")
+
+_ALIAS_AXES = ("pod", "data")
+
+
+def _mesh_sizes(mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def _axes_for(entry, mesh):
+    """Expand a spec entry (None / name / tuple / alias) to mesh axes."""
+    if entry is None:
+        return ()
+    if entry in (FSDP, BATCH):
+        cand = _ALIAS_AXES
+    elif isinstance(entry, tuple):
+        cand = entry
+    else:
+        cand = (entry,)
+    return tuple(a for a in cand if a in mesh.axis_names)
+
+
+def _fit_dim(dim: int, axes: tuple, mesh):
+    """Largest suffix of ``axes`` whose total mesh size divides ``dim``.
+
+    Leading axes are dropped first — for the FSDP group ``("pod", "data")``
+    this drops ``pod`` before giving up on sharding entirely.  Returns a
+    bare axis name, a tuple of names, or None (replicate).
+    """
+    sizes = _mesh_sizes(mesh)
+    axes = tuple(axes)
+    while axes:
+        total = int(np.prod([sizes[a] for a in axes]))
+        if total > 0 and dim % total == 0:
+            return axes if len(axes) > 1 else axes[0]
+        axes = axes[1:]
+    return None
+
+
+def fit_spec(shape: tuple, want: tuple, mesh) -> P:
+    """Fit the requested per-dim axes to ``shape`` on ``mesh``.
+
+    ``want`` entries may be None, an axis name, a tuple of names, or the
+    FSDP/BATCH aliases; missing trailing entries default to None.  An axis
+    already consumed by an earlier dim is never reused.
+    """
+    want = tuple(want) + (None,) * (len(shape) - len(want))
+    used: set = set()
+    parts = []
+    for dim, entry in zip(shape, want):
+        axes = tuple(a for a in _axes_for(entry, mesh) if a not in used)
+        fitted = _fit_dim(dim, axes, mesh) if axes else None
+        if fitted is not None:
+            used.update(fitted if isinstance(fitted, tuple) else (fitted,))
+        parts.append(fitted)
+    return P(*parts)
+
+
+# ---------------------------------------------------------------------------
+# Pytree-level rules.
+# ---------------------------------------------------------------------------
+
+def _path_keys(path) -> tuple:
+    return tuple(str(getattr(p, "key", getattr(p, "name", p))) for p in path)
+
+
+def _param_want(keys: tuple, shape: tuple) -> tuple:
+    """Per-leaf sharding intent, before mesh fitting.
+
+    * ``embed`` — vocab over ``model``, d_model over FSDP (the transpose of
+      a plain matmul weight: the vocab dim is the huge one and the embedding
+      gather is model-axis local).
+    * MoE expert stacks ``(E, d_in, d_out)`` — expert-parallel: E over the
+      FSDP/data group, output features over ``model``.
+    * any other matrix — input features over FSDP, output features over
+      ``model`` (Megatron layout).
+    * vectors/scalars — replicated.
+
+    Leaves under a ``layers`` stack carry a leading period axis that is
+    always replicated (it is scanned, not sharded).
+    """
+    name = keys[-1]
+    stacked = "layers" in keys[:-1]
+    core = shape[1:] if stacked else shape
+    if name == "embed":
+        want: tuple = ("model", FSDP)
+    elif "moe" in keys and len(core) == 3:
+        want = (FSDP, None, "model")
+    elif len(core) >= 2:
+        want = (None,) * (len(core) - 2) + (FSDP, "model")
+    else:
+        want = (None,) * len(core)
+    return ((None,) + want) if stacked else want
+
+
+def param_specs(p_shapes, mesh):
+    """PartitionSpec pytree covering every parameter leaf."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(p_shapes)
+    specs = [fit_spec(leaf.shape, _param_want(_path_keys(path), leaf.shape),
+                      mesh)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(batch_shapes, mesh):
+    """Batch leaves: leading (global-batch) dim over the BATCH group, rest
+    replicated.  A batch of 1 (long-context serving) stays replicated via
+    the divisibility fit."""
+    return jax.tree.map(
+        lambda s: fit_spec(s.shape, (BATCH,) + (None,) * (len(s.shape) - 1),
+                           mesh),
+        batch_shapes)
+
+
+def cache_specs(cache_shapes, mesh):
+    """Decode/prefill cache leaves ``(periods, B, ..., head_dim)``: batch
+    over the BATCH group, trailing feature dim over ``model`` (KV head_dim
+    for attention caches), everything else replicated."""
+    def one(s):
+        n = len(s.shape)
+        if n >= 4:
+            want = (None, BATCH) + (None,) * (n - 3) + ("model",)
+        else:
+            want = (None, BATCH) + (None,) * max(n - 2, 0)
+        return fit_spec(s.shape, want[:n], mesh)
+    return jax.tree.map(one, cache_shapes)
+
+
+def named(specs, mesh):
+    """PartitionSpec pytree -> NamedSharding pytree (jit in_shardings)."""
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -31,9 +31,11 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests: 8 fake CPU devices)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    if hasattr(jax.sharding, "AxisType"):  # jax >= 0.6 explicit-axes API
+        return jax.make_mesh(
+            (data, model), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((data, model), ("data", "model"))
 
 
 def fsdp_axes(mesh) -> tuple:

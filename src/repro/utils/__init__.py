@@ -1,3 +1,4 @@
+from repro.utils.jaxcompat import cost_analysis_dict
 from repro.utils.pytree import (
     tree_add,
     tree_scale,

@@ -1,0 +1,12 @@
+"""Small shims over jax API differences between the versions this repo
+supports (0.4.x ... current)."""
+from __future__ import annotations
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a dict on current jax but a
+    list of one per-partition dict on 0.4.x — normalize to a dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca

@@ -1,8 +1,90 @@
-"""Shared test config. NOTE: no XLA_FLAGS here — tests must see ONE device
-(the dry-run is the only place that forces 512 placeholder devices, and it
-does so in its own process)."""
+"""Shared test config. NOTE: no XLA_FLAGS set here — this process runs on
+whatever device count the environment provides (1 locally; CI exports
+``--xla_force_host_platform_device_count=8``). The subprocess-based
+lowering tests and the 512-device dry-run always set their own XLA_FLAGS
+before jax initializes, so they are independent of this process.
+
+If the real ``hypothesis`` package is unavailable (offline container), a
+minimal deterministic fallback implementing the subset this suite uses
+(``given``/``settings`` + integers/floats/lists strategies) is registered
+before collection so the property tests still run (with plain seeded
+random sampling instead of hypothesis' guided shrinking search).
+"""
+import functools
+import inspect
+import random
+import sys
+import types
+
 import jax
 import pytest
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _floats(min_value, max_value, **_):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _lists(elements, min_size=0, max_size=10, **_):
+        return _Strategy(
+            lambda rng: [elements.example(rng)
+                         for _ in range(rng.randint(min_size, max_size))])
+
+    def _sampled_from(seq):
+        return _Strategy(lambda rng: rng.choice(list(seq)))
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def _given(**strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            passthrough = [p for name, p in sig.parameters.items()
+                           if name not in strategies]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_fallback_max_examples", 20)
+                rng = random.Random(fn.__qualname__)   # deterministic per test
+                for _ in range(n):
+                    drawn = {k: s.example(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            wrapper.__signature__ = sig.replace(parameters=passthrough)
+            return wrapper
+        return deco
+
+    def _settings(max_examples=20, **_):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.lists = _lists
+    _st.sampled_from = _sampled_from
+    _st.booleans = _booleans
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.__is_fallback__ = True
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 
 @pytest.fixture(scope="session")

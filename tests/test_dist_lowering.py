@@ -21,6 +21,11 @@ SCRIPT = textwrap.dedent("""
     from repro.dist.fl_integration import make_fl_plan
 
     mesh = make_local_mesh(4, 2)
+
+    def flops(c):
+        from repro.utils import cost_analysis_dict
+        return cost_analysis_dict(c).get("flops", 0.0)
+
     out = {}
     for arch in %(archs)s:
         cfg = get_config(arch, reduced=True).replace(moe_shards=4)
@@ -29,21 +34,20 @@ SCRIPT = textwrap.dedent("""
         fn, args, sh = ds.make_train_step(cfg, shape, mesh, plan=plan)
         with mesh:
             c = jax.jit(fn, in_shardings=ds.sr.named(sh, mesh)).lower(*args).compile()
-        ca = c.cost_analysis()
-        out[arch + ":train"] = ca.get("flops", 0.0)
+        out[arch + ":train"] = flops(c)
 
         shape_d = InputShape("d", 128, 8, "decode")
         fn, args, sh = ds.make_decode_step(cfg, shape_d, mesh)
         with mesh:
             c = jax.jit(fn, in_shardings=ds.sr.named(sh, mesh)).lower(*args).compile()
-        out[arch + ":decode"] = c.cost_analysis().get("flops", 0.0)
+        out[arch + ":decode"] = flops(c)
 
         shape_p = InputShape("p", 64, 8, "prefill")
         fn, args, sh, osp = ds.make_prefill_step(cfg, shape_p, mesh)
         with mesh:
             c = jax.jit(fn, in_shardings=ds.sr.named(sh, mesh),
                         out_shardings=ds.sr.named(osp, mesh)).lower(*args).compile()
-        out[arch + ":prefill"] = c.cost_analysis().get("flops", 0.0)
+        out[arch + ":prefill"] = flops(c)
     print("RESULT::" + json.dumps(out))
 """)
 

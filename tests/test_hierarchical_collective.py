@@ -17,6 +17,7 @@ SCRIPT = textwrap.dedent("""
     import jax.numpy as jnp
     import numpy as np
     from jax.sharding import PartitionSpec as P
+    from repro.dist import shard_map
     from repro.dist.fl_integration import (make_fl_plan,
                                            hierarchical_ota_allreduce)
     from repro.launch.mesh import make_local_mesh
@@ -34,8 +35,8 @@ SCRIPT = textwrap.dedent("""
         return hierarchical_ota_allreduce(xs[0], plan,
                                           jax.random.PRNGKey(1))[None]
 
-    f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("data"),
-                              out_specs=P("data")))
+    f = jax.jit(shard_map(body, mesh=mesh, in_specs=P("data"),
+                          out_specs=P("data")))
     out = np.asarray(f(x))
 
     # expected: Σ_k colmean[c(k)] · A_n[c(k), k] ... phase1 weights then
@@ -86,8 +87,10 @@ REPLICA_SCRIPT = textwrap.dedent("""
                                               local_steps=2)
     with mesh:
         c = jax.jit(fn, in_shardings=ds.sr.named(sh, mesh)).lower(*args).compile()
+    from repro.utils import cost_analysis_dict
+    ca = cost_analysis_dict(c)
     print("RESULT::" + json.dumps(
-        {"flops": c.cost_analysis().get("flops", 0.0),
+        {"flops": ca.get("flops", 0.0),
          "collectives": sum(1 for l in c.as_text().splitlines()
                             if "all-reduce" in l or "all-gather" in l)}))
 """)

@@ -27,6 +27,36 @@ def test_ota_aggregate_matches_ref(K, C, d, dtype):
                                np.asarray(r, np.float32), atol=tol, rtol=tol)
 
 
+@pytest.mark.parametrize("K,C,d,tile", [(8, 3, 1337, 256), (5, 2, 700, 512),
+                                        (16, 4, 2049, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ota_aggregate_ragged_last_tile(K, C, d, tile, dtype):
+    """Interpret-mode parity at non-tile-aligned d: the internally padded
+    last tile must match the oracle and not leak padding into the output."""
+    key = jax.random.PRNGKey(21)
+    s = jax.random.normal(key, (K, d), dtype)
+    w = jax.random.uniform(jax.random.PRNGKey(22), (C, K), jnp.float32)
+    n = 0.1 * jax.random.normal(jax.random.PRNGKey(23), (C, d), jnp.float32)
+    y = ota_aggregate(s, w.astype(dtype), n.astype(dtype), tile=tile)
+    r = ota_aggregate_ref(s, w.astype(dtype), n.astype(dtype))
+    assert y.shape == (C, d)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+def test_ota_aggregate_ragged_one_hot_exact():
+    """Zero noise + one-hot weights at ragged d reproduce the selected rows
+    exactly, including the final (partial-tile) elements."""
+    K, C, d, tile = 6, 3, 1000, 256
+    s = jax.random.normal(jax.random.PRNGKey(24), (K, d))
+    w = jnp.eye(K)[jnp.asarray([0, 3, 5])]
+    y = ota_aggregate(s, w, jnp.zeros((C, d)), tile=tile)
+    for c, k in enumerate([0, 3, 5]):
+        np.testing.assert_allclose(np.asarray(y[c]), np.asarray(s[k]),
+                                   atol=1e-6)
+
+
 def test_ota_aggregate_linearity():
     """MAC is linear: aggregate(a+b) = aggregate(a) + aggregate(b) (no noise)."""
     key = jax.random.PRNGKey(3)
