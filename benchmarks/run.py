@@ -14,6 +14,7 @@ The roofline/dry-run analyses are separate (python -m repro.launch.roofline).
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
@@ -23,6 +24,10 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true",
                     help="minimal subset for CI smoke")
+    ap.add_argument("--bench-out", default="BENCH_kernels.json",
+                    help="machine-readable kernel-bench output path "
+                         "(fused vs three-pass wall time + modeled HBM "
+                         "bytes; tracks the perf trajectory across PRs)")
     args = ap.parse_args()
 
     from benchmarks.common import BenchScale
@@ -53,8 +58,15 @@ def main() -> None:
 
     if want("kernels"):
         from benchmarks import kernels_bench
-        for name, us in kernels_bench.run():
-            emit(name, us, "interpret-mode")
+        krows = kernels_bench.run()
+        for r in krows:
+            emit(r["name"], r["us"], r["derived"])
+        payload = {
+            r["name"]: {k: v for k, v in r.items() if k != "name"}
+            for r in krows}
+        with open(args.bench_out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.bench_out}", flush=True)
 
     if want("convergence"):
         from benchmarks import convergence

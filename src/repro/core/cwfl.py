@@ -141,6 +141,29 @@ def _mix_rows(weights: jnp.ndarray, stacked, key: Optional[jax.Array],
     return jax.tree.unflatten(treedef, out)
 
 
+def cwfl_round_auto(*args, **kwargs):
+    """Lazy forward to :func:`repro.kernels.cwfl_round.cwfl_round_auto`
+    so the core layer doesn't pay the pallas import unless the flat fast
+    path actually runs (and tests can monkeypatch the route here)."""
+    from repro.kernels.cwfl_round import cwfl_round_auto as impl
+    return impl(*args, **kwargs)
+
+
+def _flat_leaf_noise(key: jax.Array, leaves, rows: int,
+                     std_per_row: jnp.ndarray) -> jnp.ndarray:
+    """The exact noise stream :func:`_mix_rows` would add — same per-leaf
+    key splits, same (rows, prod) draw shapes — concatenated into one
+    ``(rows, d)`` matrix so the flat fast path is bit-compatible with the
+    per-leaf reference path."""
+    keys = jax.random.split(key, len(leaves))
+    cols = [
+        std_per_row[:, None] * jax.random.normal(
+            k, (rows, int(np.prod(x.shape[1:]))), jnp.float32)
+        for x, k in zip(leaves, keys)
+    ]
+    return jnp.concatenate(cols, axis=1)
+
+
 # ---------------------------------------------------------------------------
 # The aggregation operator (Algorithm 1, sync step t ∈ H).
 # ---------------------------------------------------------------------------
@@ -169,8 +192,78 @@ def phase2_weights(state: CWFLState, normalize: bool = True):
     return b, kappa
 
 
+def round_coefficients(state: CWFLState, stacked_params=None,
+                       normalize: bool = True, precode: bool = True):
+    """The complete weight set of one sync round: phase-1 amplitudes Ã
+    (precoded + renormalized), the effective phase-1 receiver noise std,
+    the consensus mix B̃ with its equivalent noise std κ, and the phase-3
+    downlink matrix — everything :func:`repro.kernels.cwfl_round.cwfl_round`
+    needs besides the signals and the pre-drawn noise.
+
+    ``stacked_params`` may be any K-stacked pytree — a flat ``(K, d)``
+    matrix included — and is required when ``precode=True`` (the eq. 5
+    amplitude clip is estimated from the transmitted signal's power).
+    """
+    A = phase1_weights(state)                                    # (C, K)
+
+    # eq. (5): clients whose per-symbol power E‖θ‖²/d exceeds 1 scale down
+    # to meet E‖x‖² ≤ P_k (precode_scale — per channel use, DESIGN.md §1).
+    if precode:
+        if stacked_params is None:
+            raise ValueError(
+                "precode=True needs stacked_params: the eq. (5) amplitude "
+                "clip is estimated from the transmitted signals' power")
+        A = A * precode_scale(state,
+                              per_client_mean_sq(stacked_params))[None, :]
+
+    # Receiver scaling (eq. 8): AWGN std σ_c/sqrt(P); with normalization
+    # both weights and noise are divided by the phase-1 row sums.
+    eff_std1 = state.head_noise_std / jnp.sqrt(state.total_power)
+    if normalize:
+        rows = jnp.maximum(A.sum(axis=1, keepdims=True), 1e-12)
+        A = A / rows
+        eff_std1 = eff_std1 / rows[:, 0]
+    B, kappa = phase2_weights(state, normalize)
+    return A, eff_std1, B, kappa, state.plan.membership.T
+
+
+def _aggregate_flat(stacked_params, state: CWFLState, key: jax.Array,
+                    normalize: bool, precode: bool):
+    """Flatten-once fast path: one (K, d) matrix through the fused
+    single-pass round kernel instead of the per-leaf ``_mix_rows`` loop.
+    The noise stream replicates the per-leaf path exactly (same key
+    splits, same draw shapes — :func:`_flat_leaf_noise`), so for f32
+    trees this is bit-compatible with the reference path."""
+    leaves, treedef = jax.tree.flatten(stacked_params)
+    K = leaves[0].shape[0]
+    C = state.num_clusters
+    k1, k2 = jax.random.split(key)
+    A, eff_std1, B, kappa, m_back = round_coefficients(
+        state, stacked_params, normalize, precode)
+
+    flat = jnp.concatenate(
+        [x.reshape(K, -1).astype(jnp.float32) for x in leaves], axis=1)
+    n1 = _flat_leaf_noise(k1, leaves, C, eff_std1)
+    n2 = _flat_leaf_noise(k2, leaves, C, kappa)
+
+    new_flat, cons_flat = cwfl_round_auto(flat, A, n1, B, n2, m_back)
+
+    new_leaves, cons_leaves, off = [], [], 0
+    for x in leaves:
+        n = int(np.prod(x.shape[1:]))
+        new_leaves.append(
+            new_flat[:, off:off + n].reshape((K,) + x.shape[1:])
+            .astype(x.dtype))
+        cons_leaves.append(
+            cons_flat[off:off + n].reshape(x.shape[1:]).astype(x.dtype))
+        off += n
+    return (jax.tree.unflatten(treedef, new_leaves),
+            jax.tree.unflatten(treedef, cons_leaves))
+
+
 def aggregate(stacked_params, state: CWFLState, key: jax.Array,
-              normalize: bool = True, precode: bool = True):
+              normalize: bool = True, precode: bool = True,
+              flat: Optional[bool] = None):
     """One CWFL sync round. Returns (new_stacked_params, consensus_mean).
 
     ``stacked_params``: pytree, every leaf (K, ...).
@@ -180,33 +273,35 @@ def aggregate(stacked_params, state: CWFLState, key: jax.Array,
       scaling at the receiver, the COTAF-style de-precoding). With
       normalization these cancel in expectation; retained for faithfulness of
       the transmitted power constraint.
+    ``flat``: route the whole round through the flatten-once fast path (the
+      fused :mod:`repro.kernels.cwfl_round` kernel above ``PALLAS_MIN_DIM``).
+      Default ``None`` auto-engages when every leaf is f32, where the fast
+      path is bit-compatible with the per-leaf reference path (noise keys
+      are replicated per leaf; the per-leaf dtype casts the reference path
+      performs between phases are all no-ops).  Non-f32 trees default to
+      the per-leaf path, whose between-phase rounding they depend on;
+      ``flat=True`` forces the fast path (f32 accumulation end-to-end).
     """
+    if flat is None:
+        flat = all(x.dtype == jnp.float32
+                   for x in jax.tree.leaves(stacked_params))
+    if flat:
+        return _aggregate_flat(stacked_params, state, key, normalize,
+                               precode)
+
     k1, k2 = jax.random.split(key)
-    A = phase1_weights(state)                                    # (C, K)
+    A, eff_std1, B, kappa, m_back = round_coefficients(
+        state, stacked_params, normalize, precode)
 
-    # eq. (5): clients whose per-symbol power E‖θ‖²/d exceeds 1 scale down
-    # to meet E‖x‖² ≤ P_k (precode_scale — per channel use, DESIGN.md §1).
-    if precode:
-        A = A * precode_scale(state,
-                              per_client_mean_sq(stacked_params))[None, :]
-
-    # Phase 1: OTA superposition at each head + receiver AWGN, scaled by
-    # 1/sqrt(P) at the receiver (eq. 8) -> effective noise std σ_c/sqrt(P).
-    eff_std1 = state.head_noise_std / jnp.sqrt(state.total_power)
-    if normalize:
-        rows = jnp.maximum(A.sum(axis=1, keepdims=True), 1e-12)
-        theta_tilde = _mix_rows(A / rows, stacked_params, k1,
-                                eff_std1 / rows[:, 0])
-    else:
-        theta_tilde = _mix_rows(A, stacked_params, k1, eff_std1)
+    # Phase 1: OTA superposition at each head + receiver AWGN (eq. 8).
+    theta_tilde = _mix_rows(A, stacked_params, k1, eff_std1)
 
     # Phase 2: heads exchange θ̃ over C(C-1) channel uses; receiver c mixes
     # with SNR weights W(c, j) plus its own θ̃_c (eq. 9, lemma 2).
-    B, kappa = phase2_weights(state, normalize)
     theta_bar = _mix_rows(B, theta_tilde, k2, kappa)
 
     # Phase 3: error-free downlink broadcast θ_k ← θ̄_{c(k)}.
-    new_params = _mix_rows(state.plan.membership.T, theta_bar, None, None)
+    new_params = _mix_rows(m_back, theta_bar, None, None)
 
     consensus = jax.tree.map(lambda x: jnp.mean(x, axis=0), theta_bar)
     return new_params, consensus

@@ -5,10 +5,12 @@ Two entry families:
 * ``phase1_ota_flat`` / ``cwfl_aggregate_flat`` — Algorithm 1 on a flat
   ``(K, d)`` client-signal matrix.  The channel math (eq. 5 precoding,
   eq. 8 receiver scaling, lemma-2 noise) is the *same code* the reference
-  operator :func:`repro.core.cwfl.aggregate` uses; the phase-1 MAC —
-  ``W @ S + N`` over the d-dimensional flattened parameters, the per-round
-  hot spot — is routed through the Pallas ``ota_aggregate`` kernel when the
-  vector is large enough to benefit (``d >= PALLAS_MIN_DIM``).
+  operator :func:`repro.core.cwfl.aggregate` uses; the full sync round —
+  OTA MAC → consensus mix → broadcast over the d-dimensional flattened
+  parameters, the per-round hot spot — is routed through the fused
+  single-pass Pallas kernel :func:`repro.kernels.cwfl_round.cwfl_round`
+  when the vector is large enough to benefit (``d >= PALLAS_MIN_DIM``),
+  keeping the intermediate θ̃/θ̄ states out of HBM entirely.
 * ``ota_allreduce_tree`` / ``build_gradient_allreduce`` — the device
   collective: the hierarchical two-phase OTA all-reduce applied to
   gradient/parameter pytrees across the mesh's ``data`` axis (one client
@@ -21,18 +23,17 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core import cwfl
 from repro.core.cwfl import CWFLState
+from repro.dist import shard_map
 from repro.dist.fl_integration import FLPlan, hierarchical_ota_allreduce
+from repro.kernels.cwfl_round import PALLAS_MIN_DIM, cwfl_round_auto
 from repro.kernels.ota_aggregate import DEFAULT_TILE
 from repro.kernels.ota_aggregate import ota_aggregate as _pallas_ota
 from repro.kernels.ref import ota_aggregate_ref
 from repro.utils import tree_flatten_vector, tree_unflatten_vector
-
-# Below this flat dimension the (C, K) matmul is too small for the kernel's
-# tile machinery to pay off; the jnp reference is a single fused matmul.
-PALLAS_MIN_DIM = 512
 
 
 def phase1_ota_flat(signals: jnp.ndarray, state: CWFLState, key: jax.Array,
@@ -47,19 +48,12 @@ def phase1_ota_flat(signals: jnp.ndarray, state: CWFLState, key: jax.Array,
     defaults to the Pallas interpreter off-TPU (CPU validation) and the
     compiled kernel on TPU.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
     _, d = signals.shape
     sig32 = signals.astype(jnp.float32)
-    a = cwfl.phase1_weights(state)
-    if precode:
-        mean_sq = jnp.mean(jnp.square(sig32), axis=1)          # E‖θ‖²/use
-        a = a * cwfl.precode_scale(state, mean_sq)[None, :]
-    eff_std = state.head_noise_std / jnp.sqrt(state.total_power)
-    if normalize:
-        rows = jnp.maximum(a.sum(axis=1, keepdims=True), 1e-12)
-        a = a / rows
-        eff_std = eff_std / rows[:, 0]
+    # a flat (K, d) matrix is itself a K-stacked pytree, so the reference
+    # operator's weight math applies verbatim (no twin copy to drift).
+    a, eff_std, _, _, _ = cwfl.round_coefficients(
+        state, sig32, normalize, precode)
     noise = eff_std[:, None] * jax.random.normal(
         key, (a.shape[0], d), jnp.float32)
     if use_pallas is None:
@@ -74,24 +68,30 @@ def cwfl_aggregate_flat(signals: jnp.ndarray, state: CWFLState,
                         precode: bool = True, tile: int = DEFAULT_TILE,
                         interpret: Optional[bool] = None,
                         use_pallas: Optional[bool] = None):
-    """Full Algorithm 1 on a flat ``(K, d)`` matrix.
+    """Full Algorithm 1 on a flat ``(K, d)`` matrix, single-pass fused.
 
     Returns ``(new_signals (K, d), consensus (d,))`` — the flat-vector twin
     of :func:`repro.core.cwfl.aggregate` (exactly equal in the noiseless
     case; noise keys are split differently per leaf in the pytree path).
+    Above ``PALLAS_MIN_DIM`` the whole round (MAC, consensus mix,
+    broadcast, consensus mean) runs in one Pallas pass per d-tile; below,
+    the jnp three-matmul reference.
     """
+    _, d = signals.shape
     k1, k2 = jax.random.split(key)
-    theta_tilde = phase1_ota_flat(signals, state, k1, normalize=normalize,
-                                  precode=precode, tile=tile,
-                                  interpret=interpret, use_pallas=use_pallas)
+    sig32 = signals.astype(jnp.float32)
 
-    b, kappa = cwfl.phase2_weights(state, normalize)
-    theta_bar = b @ theta_tilde + kappa[:, None] * jax.random.normal(
-        k2, theta_tilde.shape, jnp.float32)
+    a, eff_std, b, kappa, m_back = cwfl.round_coefficients(
+        state, sig32, normalize, precode)
+    n1 = eff_std[:, None] * jax.random.normal(
+        k1, (a.shape[0], d), jnp.float32)
+    n2 = kappa[:, None] * jax.random.normal(
+        k2, (a.shape[0], d), jnp.float32)
 
-    new = (state.plan.membership.T @ theta_bar).astype(signals.dtype)
-    consensus = jnp.mean(theta_bar, axis=0)
-    return new, consensus
+    new32, consensus = cwfl_round_auto(
+        sig32, a, n1, b, n2, m_back, tile=tile,
+        interpret=interpret, use_pallas=use_pallas)
+    return new32.astype(signals.dtype), consensus
 
 
 # ---------------------------------------------------------------------------
@@ -115,8 +115,6 @@ def build_gradient_allreduce(mesh, plan: FLPlan, axis_name: str = "data"):
     axis sharded over ``axis_name``; K must equal the axis size) to the
     same-shaped tree where every client slice holds the OTA consensus.
     """
-    from jax.sharding import PartitionSpec as P
-
     axis_size = dict(mesh.shape)[axis_name]
     if axis_size != plan.num_clients:
         # the per-rank weight-column lookup clamps out-of-range indices —
@@ -130,8 +128,6 @@ def build_gradient_allreduce(mesh, plan: FLPlan, axis_name: str = "data"):
             local = jax.tree.map(lambda x: x[0], local_tree)
             out = ota_allreduce_tree(local, plan, key, axis_name)
             return jax.tree.map(lambda x: x[None], out)
-
-        from repro.dist import shard_map
 
         specs = jax.tree.map(lambda _: P(axis_name), stacked_tree)
         f = shard_map(body, mesh=mesh, in_specs=(specs, P()),

@@ -1,3 +1,8 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# NOTE: import the fused-round kernel as
+# ``from repro.kernels.cwfl_round import cwfl_round`` — no package-level
+# re-exports here (the function would shadow its submodule of the same
+# name, and eager imports would pull in pallas for every consumer).

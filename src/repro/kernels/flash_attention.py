@@ -14,10 +14,13 @@ model implementation (repro.models.attention) uses the same math.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.ota_aggregate import resolve_interpret
 
 NEG_INF = -1e30
 
@@ -75,8 +78,11 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                                              "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     cap: float = 0.0, block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True):
-    """q: (B, H, Sq, D); k, v: (B, KV, Skv, D). Returns (B, H, Sq, D)."""
+                    interpret: Optional[bool] = None):
+    """q: (B, H, Sq, D); k, v: (B, KV, Skv, D). Returns (B, H, Sq, D).
+    ``interpret=None`` resolves backend-aware (interpret off-TPU,
+    compiled on TPU)."""
+    interpret = resolve_interpret(interpret)
     B, H, Sq, D = q.shape
     KV, Skv = k.shape[1], k.shape[2]
     G = H // KV

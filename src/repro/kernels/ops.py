@@ -4,10 +4,12 @@ These are the public entry points:
   * ``ota_aggregate_op``      — CWFL phase-1 MAC over flattened pytrees
   * ``flash_attention_op``    — (B, S, H, D)-layout attention (model layout)
 
-On TPU hardware set ``interpret=False``; this container validates in
-interpret mode (kernel body executed in python on CPU).
+``interpret=None`` resolves backend-aware: interpret mode off-TPU (this
+container validates there), compiled kernels on TPU.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +20,7 @@ from repro.utils import tree_flatten_vector, tree_unflatten_vector
 
 
 def ota_aggregate_op(stacked_params, weights, noise_key, noise_std,
-                     *, tile: int = 2048, interpret: bool = True):
+                     *, tile: int = 2048, interpret: Optional[bool] = None):
     """CWFL phase 1 over a K-stacked parameter pytree.
 
     stacked_params: pytree with (K, ...) leaves; weights: (C, K);
@@ -37,7 +39,7 @@ def ota_aggregate_op(stacked_params, weights, noise_key, noise_std,
 
 def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
                        cap: float = 0.0, block_q: int = 128,
-                       block_k: int = 128, interpret: bool = True):
+                       block_k: int = 128, interpret: Optional[bool] = None):
     """Model layout: q (B, S, H, D); k, v (B, S, KV, D) -> (B, S, H, D)."""
     qt = jnp.swapaxes(q, 1, 2)
     kt = jnp.swapaxes(k, 1, 2)

@@ -14,6 +14,7 @@ Validated in interpret mode against repro.kernels.ref.ota_aggregate_ref.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +22,17 @@ from jax.experimental import pallas as pl
 
 
 DEFAULT_TILE = 2048
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` → interpret off-TPU (CPU validation), compiled on TPU.
+
+    Shared by every kernel entry point so TPU callers get the compiled
+    kernel by default instead of a silently deoptimized interpreter run.
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
 
 
 def _ota_kernel(w_ref, s_ref, n_ref, o_ref):
@@ -38,12 +50,14 @@ def _ota_kernel(w_ref, s_ref, n_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def ota_aggregate(signals: jnp.ndarray, weights: jnp.ndarray,
                   noise: jnp.ndarray, *, tile: int = DEFAULT_TILE,
-                  interpret: bool = True) -> jnp.ndarray:
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
     """y = weights @ signals + noise, fused.
 
     signals: (K, d); weights: (C, K); noise: (C, d). Returns (C, d).
-    d is padded to a multiple of ``tile`` internally.
+    d is padded to a multiple of ``tile`` internally.  ``interpret=None``
+    resolves backend-aware (interpret off-TPU, compiled on TPU).
     """
+    interpret = resolve_interpret(interpret)
     K, d = signals.shape
     C = weights.shape[0]
     dp = -(-d // tile) * tile

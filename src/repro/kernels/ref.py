@@ -18,6 +18,24 @@ def ota_aggregate_ref(signals: jnp.ndarray, weights: jnp.ndarray,
             + noise.astype(jnp.float32)).astype(signals.dtype)
 
 
+def cwfl_round_ref(signals: jnp.ndarray, phase1: jnp.ndarray,
+                   noise1: jnp.ndarray, phase2: jnp.ndarray,
+                   noise2: jnp.ndarray, broadcast: jnp.ndarray):
+    """Three-pass CWFL sync round (the unfused baseline the fused
+    ``cwfl_round`` kernel must match bit-for-bit in f32).
+
+    signals: (K, d); phase1: (C, K) Ã; noise1: (C, d); phase2: (C, C) B̃;
+    noise2: (C, d); broadcast: (K, C) downlink matrix (membership.T).
+    Returns ``(new (K, d) signals.dtype, consensus (d,) f32)``.
+    """
+    s = signals.astype(jnp.float32)
+    theta_tilde = phase1.astype(jnp.float32) @ s + noise1.astype(jnp.float32)
+    theta_bar = (phase2.astype(jnp.float32) @ theta_tilde
+                 + noise2.astype(jnp.float32))
+    new = (broadcast.astype(jnp.float32) @ theta_bar).astype(signals.dtype)
+    return new, jnp.mean(theta_bar, axis=0)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
                         cap: float = 0.0):
     """Exact softmax attention. q: (B, H, Sq, D); k, v: (B, KV, Skv, D)."""

@@ -277,8 +277,12 @@ def make_replica_train_step(cfg: ArchConfig, shape: InputShape, mesh,
     def step(stacked_params, batch, key):
         # batch leaves: (K, per_client, ...)
         stacked_params, losses = jax.vmap(local_update)(stacked_params, batch)
+        # flat=True: the whole Algorithm-1 round runs flatten-once through
+        # the fused single-pass kernel (repro.kernels.cwfl_round) instead
+        # of the per-leaf _mix_rows loop — one HBM read of the stacked
+        # params and one write of the new/consensus state per sync.
         stacked_params, consensus = cwfl_core.aggregate(
-            stacked_params, plan.state, key)
+            stacked_params, plan.state, key, flat=True)
         return stacked_params, jnp.mean(losses)
 
     p_shapes = param_shapes(cfg)

@@ -120,6 +120,50 @@ def test_noise_floor_scales_with_snr(setup):
     assert errs[0] > errs[1] > errs[2]
 
 
+@pytest.mark.parametrize("normalize,precode", [(True, True), (True, False),
+                                               (False, True)])
+def test_flat_fast_path_matches_per_leaf_path(setup, normalize, precode):
+    """The flatten-once fast path (fused cwfl_round kernel; d >= 512 so
+    Pallas engages) is bit-compatible with the per-leaf reference path —
+    noiseless AND with the channel noise on (the noise stream is
+    replicated per leaf)."""
+    _, state = setup
+    K = state.num_clients
+    params = {"w": jax.random.normal(jax.random.PRNGKey(31), (K, 37, 25)),
+              "b": jax.random.normal(jax.random.PRNGKey(32), (K, 411))}
+    for st in (state, _noiseless(state)):
+        key = jax.random.PRNGKey(33)
+        new_f, cons_f = cwfl.aggregate(params, st, key, normalize, precode,
+                                       flat=True)
+        new_l, cons_l = cwfl.aggregate(params, st, key, normalize, precode,
+                                       flat=False)
+        for k in params:
+            np.testing.assert_array_equal(np.asarray(new_f[k]),
+                                          np.asarray(new_l[k]))
+            np.testing.assert_array_equal(np.asarray(cons_f[k]),
+                                          np.asarray(cons_l[k]))
+
+
+def test_flat_fast_path_auto_engagement(setup, monkeypatch):
+    """Default routing: f32 trees flatten through the fused round;
+    non-f32 trees keep the per-leaf path (their between-phase rounding
+    depends on it) unless forced."""
+    _, state = setup
+    K = state.num_clients
+    calls = []
+    real = cwfl.cwfl_round_auto
+    monkeypatch.setattr(cwfl, "cwfl_round_auto",
+                        lambda *a, **kw: calls.append(1) or real(*a, **kw))
+    f32_tree = {"w": jax.random.normal(jax.random.PRNGKey(41), (K, 40))}
+    cwfl.aggregate(f32_tree, state, jax.random.PRNGKey(42))
+    assert len(calls) == 1
+    bf16_tree = jax.tree.map(lambda x: x.astype(jnp.bfloat16), f32_tree)
+    cwfl.aggregate(bf16_tree, state, jax.random.PRNGKey(43))
+    assert len(calls) == 1          # stayed on the per-leaf path
+    cwfl.aggregate(bf16_tree, state, jax.random.PRNGKey(44), flat=True)
+    assert len(calls) == 2          # forced
+
+
 def test_channel_uses_efficiency():
     """Paper's headline efficiency: CWFL ≪ decentralized channel uses."""
     uses = cwfl.channel_uses_per_round(50, 3)

@@ -5,11 +5,25 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.cwfl_round import cwfl_round, cwfl_round_auto
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ops import flash_attention_op, ota_aggregate_op
 from repro.kernels.ota_aggregate import ota_aggregate
-from repro.kernels.ref import flash_attention_ref, ota_aggregate_ref
+from repro.kernels.ref import (cwfl_round_ref, flash_attention_ref,
+                               ota_aggregate_ref)
 from repro.models.attention import flash_attention as model_flash
+
+
+def _round_inputs(K, C, d, seed=0, dtype=jnp.float32, noisy=True):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    s = jax.random.normal(ks[0], (K, d), dtype)
+    a = jax.random.uniform(ks[1], (C, K), jnp.float32)
+    b = jax.random.uniform(ks[2], (C, C), jnp.float32)
+    m = jax.random.uniform(ks[3], (K, C), jnp.float32)
+    scale = 0.1 if noisy else 0.0
+    n1 = scale * jax.random.normal(ks[4], (C, d), jnp.float32)
+    n2 = scale * jax.random.normal(ks[5], (C, d), jnp.float32)
+    return s, a, n1, b, n2, m
 
 
 @pytest.mark.parametrize("K,C,d", [(8, 2, 512), (50, 3, 4096), (27, 4, 1000),
@@ -69,6 +83,95 @@ def test_ota_aggregate_linearity():
     yab = ota_aggregate(a + b, w, zero, tile=256)
     np.testing.assert_allclose(np.asarray(ya + yb), np.asarray(yab),
                                atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-pass CWFL round kernel.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K,C,d,tile", [(8, 2, 2048, 512), (50, 3, 4096, 2048),
+                                        (12, 3, 1337, 512), (5, 2, 700, 256)])
+def test_cwfl_round_noiseless_bitexact(K, C, d, tile):
+    """Noiseless f32: the fused kernel matches the three-pass reference
+    bit-for-bit, on tile-aligned and ragged d alike."""
+    s, a, n1, b, n2, m = _round_inputs(K, C, d, seed=d, noisy=False)
+    new, cons = cwfl_round(s, a, n1, b, n2, m, tile=tile)
+    rnew, rcons = cwfl_round_ref(s, a, n1, b, n2, m)
+    assert new.shape == (K, d) and cons.shape == (d,)
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(rnew))
+    np.testing.assert_array_equal(np.asarray(cons), np.asarray(rcons))
+
+
+@pytest.mark.parametrize("K,C,d,tile", [(8, 3, 2048, 512), (27, 4, 1000, 256),
+                                        (16, 4, 2049, 2048)])
+def test_cwfl_round_injected_noise_bitexact(K, C, d, tile):
+    """Fixed injected noise (both phases): still bit-for-bit vs the
+    reference — the noise adds are inside the same fused pass."""
+    s, a, n1, b, n2, m = _round_inputs(K, C, d, seed=3 * d, noisy=True)
+    new, cons = cwfl_round(s, a, n1, b, n2, m, tile=tile)
+    rnew, rcons = cwfl_round_ref(s, a, n1, b, n2, m)
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(rnew))
+    np.testing.assert_array_equal(np.asarray(cons), np.asarray(rcons))
+
+
+@pytest.mark.parametrize("d,tile", [(2048, 512), (1337, 512)])
+def test_cwfl_round_bf16_signals_f32_accum(d, tile):
+    """bf16 signals: accumulation stays f32 (consensus comes back f32 and
+    matches the f32-computed reference to f32 tolerance; the bf16 ``new``
+    matches the reference's bf16 cast exactly)."""
+    K, C = 10, 3
+    s, a, n1, b, n2, m = _round_inputs(K, C, d, seed=7, dtype=jnp.bfloat16)
+    new, cons = cwfl_round(s, a, n1, b, n2, m, tile=tile)
+    rnew, rcons = cwfl_round_ref(s, a, n1, b, n2, m)
+    assert new.dtype == jnp.bfloat16 and cons.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(new, np.float32),
+                                  np.asarray(rnew, np.float32))
+    np.testing.assert_allclose(np.asarray(cons), np.asarray(rcons),
+                               atol=1e-6, rtol=1e-6)
+    # f32 accumulation: the consensus of bf16 inputs must agree with the
+    # all-f32 round to bf16-rounding error only (not bf16-accumulation
+    # error, which would be ~C× larger).
+    s32 = s.astype(jnp.float32)
+    _, cons32 = cwfl_round_ref(s32, a, n1, b, n2, m)
+    np.testing.assert_allclose(np.asarray(cons), np.asarray(cons32),
+                               atol=5e-2, rtol=5e-2)
+
+
+@pytest.mark.parametrize("K,C", [(1, 1), (1, 2), (7, 1)])
+@pytest.mark.parametrize("d", [512, 700])
+def test_cwfl_round_degenerate_shapes(K, C, d):
+    """K=1 / C=1 degenerate cluster layouts still match the reference
+    (fp32 tolerance: 1x1 matmuls may fuse a multiply-add differently)."""
+    s, a, n1, b, n2, m = _round_inputs(K, C, d, seed=K + 10 * C)
+    new, cons = cwfl_round(s, a, n1, b, n2, m, tile=512)
+    rnew, rcons = cwfl_round_ref(s, a, n1, b, n2, m)
+    np.testing.assert_allclose(np.asarray(new), np.asarray(rnew),
+                               atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(cons), np.asarray(rcons),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_cwfl_round_auto_routes_by_dim(monkeypatch):
+    """The dispatcher uses the Pallas kernel at d >= PALLAS_MIN_DIM and
+    the jnp reference below (observed via spy); both agree with the
+    oracle."""
+    from repro.kernels import cwfl_round as cr  # the submodule
+
+    kernel_dims = []
+    real_kernel = cr.cwfl_round
+    monkeypatch.setattr(
+        cr, "cwfl_round",
+        lambda *a, **kw: kernel_dims.append(a[0].shape[1])
+        or real_kernel(*a, **kw))
+    for d in (128, 4096):
+        s, a, n1, b, n2, m = _round_inputs(6, 2, d, seed=d)
+        new, cons = cwfl_round_auto(s, a, n1, b, n2, m)
+        rnew, rcons = cwfl_round_ref(s, a, n1, b, n2, m)
+        np.testing.assert_allclose(np.asarray(new), np.asarray(rnew),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(cons), np.asarray(rcons),
+                                   atol=1e-6)
+    assert kernel_dims == [4096]   # small d stayed on the jnp reference
 
 
 @pytest.mark.parametrize("B,H,KV,S,D", [(2, 4, 2, 256, 64), (1, 2, 1, 100, 32),

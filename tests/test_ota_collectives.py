@@ -66,6 +66,59 @@ def test_flat_aggregate_matches_pytree_operator(state, precode):
                                np.asarray(cons_tree["b"]), atol=1e-4)
 
 
+def test_cwfl_aggregate_flat_routes_through_fused_round(state, monkeypatch):
+    """Above PALLAS_MIN_DIM the flat aggregate runs the fused single-pass
+    kernel (not the three separate matmuls) — and still matches the
+    explicitly-unfused result exactly."""
+    calls = {"auto": 0, "pallas": []}
+    real_auto = oc.cwfl_round_auto
+
+    def spy(*a, **kw):
+        calls["auto"] += 1
+        calls["pallas"].append(kw.get("use_pallas"))
+        return real_auto(*a, **kw)
+
+    monkeypatch.setattr(oc, "cwfl_round_auto", spy)
+    K = state.num_clients
+    s = jax.random.normal(jax.random.PRNGKey(9), (K, 2000))
+    key = jax.random.PRNGKey(10)
+    new_k, cons_k = oc.cwfl_aggregate_flat(s, state, key)
+    assert calls["auto"] == 1 and calls["pallas"] == [None]  # d>=512: pallas
+    new_r, cons_r = oc.cwfl_aggregate_flat(s, state, key, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(new_k), np.asarray(new_r),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(cons_k), np.asarray(cons_r),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_replica_train_step_uses_flat_fast_path(monkeypatch):
+    """make_replica_train_step's sync round flattens once through the
+    fused-round path (cwfl.aggregate flat=True -> cwfl_round_auto),
+    observed at trace time via eval_shape — no compute."""
+    from repro.configs import get_config
+    from repro.core import cwfl as cwfl_core
+    from repro.dist.fl_integration import make_fl_plan
+    from repro.launch.mesh import make_local_mesh
+    from repro.models.config import InputShape
+    from repro.training import dist_steps as ds
+
+    calls = []
+    real_auto = cwfl_core.cwfl_round_auto
+    monkeypatch.setattr(cwfl_core, "cwfl_round_auto",
+                        lambda *a, **kw: calls.append(a[0].shape)
+                        or real_auto(*a, **kw))
+
+    mesh = make_local_mesh(1, 1)
+    cfg = get_config("gemma2-9b", reduced=True)
+    shape = InputShape("t", 16, 4, "train")
+    plan = make_fl_plan(4, 2, jax.random.PRNGKey(0))
+    fn, args, _ = ds.make_replica_train_step(cfg, shape, mesh, plan)
+    jax.eval_shape(fn, *args)
+    assert len(calls) == 1
+    K, d = calls[0]
+    assert K == plan.num_clients and d > 512   # flattened-once, fused route
+
+
 def test_build_gradient_allreduce_single_client_identity():
     """Smoke of the full shard_map path on the 1-device mesh: a single
     noiseless client's consensus is its own value."""
