@@ -6,6 +6,7 @@ system-level extras. Prints ``name,us_per_call,derived`` CSV rows.
   channel_uses  channel-use efficiency (paper §IV claim)
   convergence   Theorem-1 O(1/T) decay + SNR noise floor
   kernels       Pallas kernel micro-benchmarks (interpret mode)
+  sim           scenario engine: scan vs loop rounds/sec + MC throughput
 
 Default is a CPU-scaled grid (same protocol, reduced sizes); ``--full``
 restores the paper's sizes. ``--only fig2`` etc. selects one benchmark.
@@ -28,6 +29,10 @@ def main() -> None:
                     help="machine-readable kernel-bench output path "
                          "(fused vs three-pass wall time + modeled HBM "
                          "bytes; tracks the perf trajectory across PRs)")
+    ap.add_argument("--sim-out", default="BENCH_sim.json",
+                    help="machine-readable sim-bench output path "
+                         "(scan vs loop rounds/sec, scan speedup, "
+                         "Monte-Carlo throughput)")
     args = ap.parse_args()
 
     from benchmarks.common import BenchScale
@@ -67,6 +72,19 @@ def main() -> None:
         with open(args.bench_out, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.bench_out}", flush=True)
+
+    if want("sim"):
+        from benchmarks import sim_bench
+        srows = sim_bench.run(mc_rounds=3 if args.fast else 8,
+                              seeds=2 if args.fast else 4)
+        for r in srows:
+            emit(r["name"], r["us"], r["derived"])
+        payload = {
+            r["name"]: {k: v for k, v in r.items() if k != "name"}
+            for r in srows}
+        with open(args.sim_out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.sim_out}", flush=True)
 
     if want("convergence"):
         from benchmarks import convergence

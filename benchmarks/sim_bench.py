@@ -1,0 +1,141 @@
+"""Scenario-engine benchmarks: scanned trajectory vs legacy per-round loop.
+
+Measures, on the tiny-MLP CPU workload (same protocol as the paper's §V,
+scaled):
+
+* ``sim_scan``  — one full trajectory as a single jitted ``lax.scan``
+  (no per-round host sync, metrics in on-device buffers);
+* ``sim_loop``  — the pre-engine structure: one jitted round, Python loop,
+  ``float(loss)`` host sync per round;
+* ``sim_mc``    — the Monte-Carlo grid (seeds × SNR sweep) compiled as ONE
+  jit, reporting aggregate rounds/sec throughput.
+
+``benchmarks/run.py --only sim`` persists the rows to ``BENCH_sim.json``
+(rounds/sec, scan-vs-loop speedup, MC throughput) so the speed trajectory
+is machine-comparable across PRs.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _median_time(fn, n: int = 3) -> float:
+    """Median wall seconds over ``n`` calls (callers warm up first)."""
+    samples = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    return statistics.median(samples)
+
+
+def run(rounds: int = 8, mc_rounds: int = 3, seeds: int = 2,
+        clients: int = 8, hidden: int = 32, train: int = 960,
+        test: int = 512, snr_grid=(0.0, 20.0, 40.0)):
+    """Returns a list of row dicts: name, us, derived + JSON extras.
+
+    ``rounds`` drives the scan-vs-loop A/B (long enough that the scan's
+    fixed setup amortizes — at T≲3 the per-round host dispatch the scan
+    removes is in the measurement noise); ``mc_rounds``/``seeds`` size
+    the Monte-Carlo sweep (CI smoke: 3 rounds × 2 seeds × SNR grid).
+    """
+    from repro.core import TopologyConfig, make_topology
+    from repro.data import (SyntheticImageConfig, make_synthetic_images,
+                            partition_iid)
+    from repro.models import make_mnist_mlp, nll_loss
+    from repro.sim.engine import _SCAN_UNROLL, _build
+    from repro.sim.scenarios import Scenario
+    from repro.training import FLConfig
+
+    tcfg = TopologyConfig(num_clients=clients, num_hotspots=3)
+    topo = make_topology(jax.random.PRNGKey(7), tcfg)
+    dcfg = SyntheticImageConfig.mnist_like(train, test)
+    (xtr, ytr), (xte, yte) = make_synthetic_images(jax.random.PRNGKey(1),
+                                                   dcfg)
+    xs, ys = partition_iid(jax.random.PRNGKey(2), xtr, ytr, clients)
+    init, apply = make_mnist_mlp(hidden=(hidden,))
+    loss = lambda p, x, y: nll_loss(apply(p, x), y)
+    cfg = FLConfig(strategy="cwfl", rounds=rounds, snr_db=40.0,
+                   eval_samples=test)
+    tag = f"K{clients}_T{rounds}"
+    rows = []
+
+    prepare, make_body = _build(init, apply, loss, topo, xs, ys, xte, yte,
+                                cfg, Scenario(), tcfg)
+    ctx, carry0, scan_xs = prepare(cfg.seed, cfg.snr_db)
+    body = make_body(ctx)
+
+    # --- scanned trajectory (one jit, no per-round host sync) -------------
+    scan_f = jax.jit(
+        lambda c, x: jax.lax.scan(body, c, x, unroll=_SCAN_UNROLL))
+    t0 = time.perf_counter()
+    jax.block_until_ready(scan_f(carry0, scan_xs))          # compile + run
+    scan_compile_s = time.perf_counter() - t0
+    scan_s = _median_time(
+        lambda: jax.block_until_ready(scan_f(carry0, scan_xs)))
+    scan_rps = rounds / scan_s
+
+    # --- legacy per-round loop (jitted round, host loop + float() sync) ---
+    body_j = jax.jit(body)
+    inp0 = jax.tree.map(lambda x: x[0], scan_xs)
+    jax.block_until_ready(body_j(carry0, inp0))             # compile
+
+    def loop_once():
+        c = carry0
+        for t in range(rounds):
+            inp = jax.tree.map(lambda x: x[t], scan_xs)
+            c, (l, a) = body_j(c, inp)
+            float(l), float(a)                              # per-round sync
+    loop_s = _median_time(loop_once)
+    loop_rps = rounds / loop_s
+    speedup = loop_s / scan_s
+
+    rows.append({"name": f"sim_scan_{tag}", "us": scan_s * 1e6,
+                 "derived": f"rps={scan_rps:.2f};speedup_vs_loop="
+                            f"{speedup:.2f}x",
+                 "rounds_per_sec": scan_rps,
+                 "speedup_vs_loop": speedup,
+                 "compile_seconds": scan_compile_s,
+                 "rounds": rounds})
+    rows.append({"name": f"sim_loop_{tag}", "us": loop_s * 1e6,
+                 "derived": f"rps={loop_rps:.2f}",
+                 "rounds_per_sec": loop_rps,
+                 "rounds": rounds})
+
+    # --- Monte-Carlo grid: seeds × SNR sweep in ONE jit -------------------
+    grid = jnp.asarray(snr_grid, jnp.float32)
+    mc_cfg = FLConfig(strategy="cwfl", rounds=mc_rounds, snr_db=40.0,
+                      eval_samples=test)
+    mc_prepare, mc_make_body = _build(init, apply, loss, topo, xs, ys, xte,
+                                      yte, mc_cfg, Scenario(), tcfg)
+
+    def traj(seed, snr_db):
+        ctx, c0, sx = mc_prepare(seed, snr_db)
+        _, (l, a) = jax.lax.scan(mc_make_body(ctx), c0, sx,
+                                 unroll=_SCAN_UNROLL)
+        return l, a
+
+    mc_f = jax.jit(jax.vmap(jax.vmap(traj, in_axes=(None, 0)),
+                            in_axes=(0, None)))
+    seed_arr = jnp.arange(seeds)
+    t0 = time.perf_counter()
+    jax.block_until_ready(mc_f(seed_arr, grid))             # compile + run
+    mc_compile_s = time.perf_counter() - t0
+    mc_s = _median_time(lambda: jax.block_until_ready(mc_f(seed_arr, grid)))
+    n_traj = seeds * int(grid.shape[0])
+    mc_rps = n_traj * mc_rounds / mc_s
+    rows.append({"name": f"sim_mc_S{seeds}_G{int(grid.shape[0])}"
+                         f"_K{clients}_T{mc_rounds}",
+                 "us": mc_s * 1e6,
+                 "derived": f"traj={n_traj};mc_rps={mc_rps:.2f}",
+                 "trajectories": n_traj,
+                 "mc_rounds_per_sec": mc_rps,
+                 "compile_seconds": mc_compile_s,
+                 "snr_grid": np.asarray(grid).tolist(),
+                 "rounds": mc_rounds})
+    return rows

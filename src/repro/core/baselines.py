@@ -51,32 +51,105 @@ class COTAFState:
     client_power: jnp.ndarray     # (K,) water-filled P_k
     total_power: float
     noise_std: jnp.ndarray        # scalar σ at the server
+    server: Optional[jnp.ndarray] = None   # receiver index (None = unknown)
+
+
+jax.tree_util.register_pytree_node(
+    COTAFState,
+    lambda s: ((s.client_power, s.noise_std, s.server), s.total_power),
+    lambda aux, c: COTAFState(client_power=c[0], total_power=aux,
+                              noise_std=c[1], server=c[2]))
+
+
+def cotaf_participation(state: COTAFState,
+                        mask: Optional[jnp.ndarray]) -> Optional[jnp.ndarray]:
+    """(K,) effective participation for one COTAF round, or ``None``.
+
+    The server is forced present — it is the MAC *receiver* and its own
+    data arrives locally without crossing the channel, so masking it out
+    would discard the aggregate at the one node that holds it (the same
+    receiver rule as ``cwfl.participation_weights`` for cluster heads).
+    States built before server tracking (``server=None``) fall back to
+    the raw mask.
+    """
+    if mask is None:
+        return None
+    m = mask.astype(jnp.float32)
+    if state.server is None:
+        return m
+    K = m.shape[0]
+    return jnp.where(jnp.arange(K) == state.server, 1.0, m)
+
+
+def cotaf_state_from_gains(link_gain: jnp.ndarray, total_power: float,
+                           noise_var, server=None,
+                           csi_perturb: Optional[jnp.ndarray] = None
+                           ) -> COTAFState:
+    """COTAF state from a raw (K, K) complex gain matrix — the traced half
+    of :func:`cotaf_setup`, usable inside ``lax.scan``/``vmap`` (the
+    scenario engine rebuilds it per round from a time-varying channel).
+
+    Server-selection rule: the server is the client with the largest
+    mean received link gain ``mean_j |h_{k,j}|²`` — the node a base
+    station would approximate, sitting where aggregate connectivity is
+    best.  Selection is ``jnp.argmax`` (a traced op, no host sync); pass
+    ``server`` (int or traced scalar) to pin it explicitly.
+
+    ``csi_perturb``: optional (K,) multiplicative factor on the
+    water-filling gains (imperfect CSI at the allocator — same semantics
+    as ``cwfl.state_from_plan``).
+    """
+    if server is None:
+        server = jnp.argmax((jnp.abs(link_gain) ** 2).mean(axis=1))
+    s = jnp.asarray(server)
+    g = jnp.abs(link_gain[:, s]) ** 2 / noise_var
+    g = g.at[s].set(jnp.max(g))  # the server's own data arrives locally
+    if csi_perturb is not None:
+        g = g * csi_perturb
+    power = ch.water_filling(g, total_power)
+    return COTAFState(client_power=power,
+                      total_power=total_power,
+                      noise_std=jnp.sqrt(noise_var).astype(jnp.float32),
+                      server=s)
 
 
 def cotaf_setup(topology: Topology, key: jax.Array,
                 snr_db: Optional[float] = None,
                 server: Optional[int] = None) -> COTAFState:
-    """Water-fill power over client→server links. The 'server' is the client
-    with the best average channel (a base station would sit centrally)."""
+    """Water-fill power over client→server links.
+
+    The 'server' is the client with the best *average* channel (the rule
+    a central base station approximates); see
+    :func:`cotaf_state_from_gains` for the precise selection rule.  The
+    whole setup is traced jnp — no host-side ``int()`` sync — so it can
+    live inside a scanned round loop or under ``vmap`` over scenario
+    scalars (``snr_db`` may be a tracer).
+    """
     del key
     noise_var = topology.noise_var
     if snr_db is not None:
         noise_var = ch.snr_db_to_noise_var(topology.total_power, snr_db)
-    mean_gain = (jnp.abs(topology.link_gain) ** 2).mean(axis=1)
-    s = int(jnp.argmax(mean_gain)) if server is None else server
-    g = jnp.abs(topology.link_gain[:, s]) ** 2 / noise_var
-    g = g.at[s].set(jnp.max(g))  # the server's own data arrives locally
-    power = ch.water_filling(g, topology.total_power)
-    return COTAFState(client_power=power,
-                      total_power=float(topology.total_power),
-                      noise_std=jnp.asarray(jnp.sqrt(noise_var), jnp.float32))
+    return cotaf_state_from_gains(topology.link_gain,
+                                  float(topology.total_power), noise_var,
+                                  server=server)
 
 
 def cotaf_aggregate(stacked_params, state: COTAFState, key: jax.Array,
-                    normalize: bool = True, precode: bool = True):
-    """θ̃ = Σ_k sqrt(P_k/P) θ_k + w̃ over ONE shared MAC (all K at once)."""
+                    normalize: bool = True, precode: bool = True,
+                    mask: Optional[jnp.ndarray] = None):
+    """θ̃ = Σ_k sqrt(P_k/P) θ_k + w̃ over ONE shared MAC (all K at once).
+
+    ``mask``: optional (K,) {0,1} per-round participation — absent clients
+    get a zero MAC amplitude before the renormalization (mask-aware, same
+    semantics as ``cwfl.round_coefficients``; the server is forced
+    present, :func:`cotaf_participation`); an all-ones mask is
+    bit-identical to ``mask=None``.
+    """
     K = jax.tree.leaves(stacked_params)[0].shape[0]
     p = jnp.sqrt(state.client_power / state.total_power)          # (K,)
+    part = cotaf_participation(state, mask)
+    if part is not None:
+        p = p * part.astype(p.dtype)
     if precode:
         # eq. (5) on the per-channel-use mean square (DESIGN.md §1) — same
         # estimator + amplitude as CWFL's precode_scale, without heads.
@@ -106,6 +179,13 @@ class DecentralizedState:
     total_power: float
 
 
+jax.tree_util.register_pytree_node(
+    DecentralizedState,
+    lambda s: ((s.mixing, s.noise_std), s.total_power),
+    lambda aux, c: DecentralizedState(mixing=c[0], noise_std=c[1],
+                                      total_power=aux))
+
+
 def metropolis_weights(adjacency: jnp.ndarray) -> jnp.ndarray:
     """Symmetric doubly-stochastic mixing from a graph (Metropolis–Hastings):
     W(i,j) = 1/(1+max(d_i, d_j)) for edges, diagonal = 1 − Σ_j W(i,j)."""
@@ -116,16 +196,29 @@ def metropolis_weights(adjacency: jnp.ndarray) -> jnp.ndarray:
     return W + jnp.diag(1.0 - W.sum(axis=1))
 
 
+def decentralized_state_from_graph(adjacency: jnp.ndarray,
+                                   total_power: float,
+                                   noise_var) -> DecentralizedState:
+    """Decentralized state from a raw adjacency — traced-friendly half of
+    :func:`decentralized_setup` for per-round rebuilds in the scenario
+    engine.  Isolated nodes (degree 0 — e.g. clients masked out of a
+    round) get ``W(k,k) = 1`` and zero effective noise, i.e. they keep
+    their parameters unchanged — exactly the no-participation semantics.
+    """
+    return DecentralizedState(
+        mixing=metropolis_weights(adjacency),
+        noise_std=jnp.sqrt(noise_var).astype(jnp.float32),
+        total_power=total_power)
+
+
 def decentralized_setup(topology: Topology, key: jax.Array,
                         snr_db: Optional[float] = None) -> DecentralizedState:
     del key
     noise_var = topology.noise_var
     if snr_db is not None:
         noise_var = ch.snr_db_to_noise_var(topology.total_power, snr_db)
-    return DecentralizedState(
-        mixing=metropolis_weights(topology.adjacency),
-        noise_std=jnp.asarray(jnp.sqrt(noise_var), jnp.float32),
-        total_power=float(topology.total_power))
+    return decentralized_state_from_graph(
+        topology.adjacency, float(topology.total_power), noise_var)
 
 
 def decentralized_aggregate(stacked_params, state: DecentralizedState,

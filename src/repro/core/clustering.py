@@ -18,7 +18,12 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class ClusterPlan:
-    """Output of the offline clustering phase."""
+    """Output of the offline clustering phase.
+
+    Registered as a jax pytree (all fields are arrays) so plans can ride a
+    ``lax.scan`` carry / ``lax.cond`` branch — the scenario engine
+    (`repro.sim`) re-clusters periodically inside the scanned round loop.
+    """
 
     assignment: jnp.ndarray        # (K,) int cluster id per client
     heads: jnp.ndarray             # (C,) int client index of each cluster-head
@@ -29,6 +34,13 @@ class ClusterPlan:
     @property
     def num_clusters(self) -> int:
         return int(self.heads.shape[0])
+
+
+jax.tree_util.register_pytree_node(
+    ClusterPlan,
+    lambda p: ((p.assignment, p.heads, p.membership, p.cluster_snr,
+                p.head_mask), None),
+    lambda _, c: ClusterPlan(*c))
 
 
 def _kmeans(features: jnp.ndarray, num_clusters: int, key: jax.Array,

@@ -59,32 +59,66 @@ class CWFLState:
         return self.plan.num_clusters
 
 
+# Pytree registration (total_power is static aux data — always the
+# topology's concrete python float) so states can live in scan carries and
+# jit arguments inside the scenario engine.
+jax.tree_util.register_pytree_node(
+    CWFLState,
+    lambda s: ((s.plan, s.client_power, s.head_noise_std,
+                s.consensus_noise_std, s.mix), s.total_power),
+    lambda aux, c: CWFLState(plan=c[0], client_power=c[1], total_power=aux,
+                             head_noise_std=c[2], consensus_noise_std=c[3],
+                             mix=c[4]))
+
+
 def setup(topology: Topology, cfg: CWFLConfig, key: jax.Array) -> CWFLState:
     """Offline phase: cluster on SNR, water-fill power, build W (paper §IV)."""
     plan = cl.make_cluster_plan(topology.link_snr, topology.adjacency,
                                 cfg.num_clusters, key)
-    K = topology.num_clients
-
     noise_var = topology.noise_var
     if cfg.snr_db is not None:
         noise_var = ch.snr_db_to_noise_var(topology.total_power, cfg.snr_db)
+    return state_from_plan(plan, topology.link_gain,
+                           float(topology.total_power), noise_var)
+
+
+def state_from_plan(plan: cl.ClusterPlan, link_gain: jnp.ndarray,
+                    total_power: float, noise_var,
+                    csi_perturb: Optional[jnp.ndarray] = None) -> CWFLState:
+    """Water-fill power and budget noise for a *given* cluster plan.
+
+    This is the per-channel-realization half of :func:`setup`, split out so
+    the scenario engine (`repro.sim`) can rebuild the round state from a
+    time-varying ``link_gain`` inside a ``lax.scan`` body — everything here
+    is pure jnp and traces cleanly (``noise_var`` may be a traced scalar,
+    e.g. a vmapped SNR-sweep axis).
+
+    ``csi_perturb``: optional (K,) multiplicative factor on the effective
+    water-filling gains — models imperfect CSI at power-allocation time
+    (the *true* channel still carries the signal; only the allocator is
+    misinformed).
+    """
+    K = link_gain.shape[0]
 
     # Effective member→head channel gains; heads use their mean head→head gain.
     head_of = plan.heads[plan.assignment]                    # (K,)
-    gain_to_head = jnp.abs(topology.link_gain[jnp.arange(K), head_of]) ** 2
-    head_rows = jnp.abs(topology.link_gain[plan.heads][:, plan.heads]) ** 2
+    gain_to_head = jnp.abs(link_gain[jnp.arange(K), head_of]) ** 2
+    head_rows = jnp.abs(link_gain[plan.heads][:, plan.heads]) ** 2
     mean_h2h = head_rows.sum() / jnp.maximum(
         plan.num_clusters * (plan.num_clusters - 1), 1)
     is_head = plan.head_mask > 0
     eff_gain = jnp.where(is_head, mean_h2h, gain_to_head) / noise_var
+    if csi_perturb is not None:
+        eff_gain = eff_gain * csi_perturb
 
-    client_power = ch.water_filling(eff_gain, topology.total_power)
+    client_power = ch.water_filling(eff_gain, total_power)
     sigma = jnp.sqrt(noise_var)
-    head_noise_std = jnp.full((plan.num_clusters,), sigma, jnp.float32)
-    consensus_noise_std = jnp.full((plan.num_clusters,), sigma, jnp.float32)
+    head_noise_std = jnp.full((plan.num_clusters,), 1.0, jnp.float32) * sigma
+    consensus_noise_std = jnp.full((plan.num_clusters,), 1.0,
+                                   jnp.float32) * sigma
     mix = cl.consensus_weights(plan.cluster_snr)
     return CWFLState(plan=plan, client_power=client_power,
-                     total_power=float(topology.total_power),
+                     total_power=total_power,
                      head_noise_std=head_noise_std,
                      consensus_noise_std=consensus_noise_std, mix=mix)
 
@@ -192,8 +226,27 @@ def phase2_weights(state: CWFLState, normalize: bool = True):
     return b, kappa
 
 
+def participation_weights(state: CWFLState,
+                          mask: Optional[jnp.ndarray]) -> Optional[jnp.ndarray]:
+    """(K,) effective participation for one round, or ``None`` if unmasked.
+
+    Cluster-heads are forced present: they are the phase-1 *receivers* and
+    the phase-2 consensus endpoints, so a head dropping out would kill its
+    whole cluster (an all-zero Ã row whose renormalization then amplifies
+    the receiver noise unboundedly).  A mask entry of 0 on a head is
+    therefore silently ignored — modelling a true head outage requires
+    re-electing heads (re-clustering), not masking; see the
+    `cluster-churn` scenario in `repro.sim.scenarios`.
+    """
+    if mask is None:
+        return None
+    return jnp.where(state.plan.head_mask > 0, 1.0,
+                     mask.astype(jnp.float32))
+
+
 def round_coefficients(state: CWFLState, stacked_params=None,
-                       normalize: bool = True, precode: bool = True):
+                       normalize: bool = True, precode: bool = True,
+                       mask: Optional[jnp.ndarray] = None):
     """The complete weight set of one sync round: phase-1 amplitudes Ã
     (precoded + renormalized), the effective phase-1 receiver noise std,
     the consensus mix B̃ with its equivalent noise std κ, and the phase-3
@@ -203,8 +256,21 @@ def round_coefficients(state: CWFLState, stacked_params=None,
     ``stacked_params`` may be any K-stacked pytree — a flat ``(K, d)``
     matrix included — and is required when ``precode=True`` (the eq. 5
     amplitude clip is estimated from the transmitted signal's power).
+
+    ``mask``: optional (K,) {0,1} per-round participation (DESIGN.md §Sim).
+    Absent clients get a zero column in Ã *before* the row renormalization,
+    so they neither transmit power nor bias the OTA sum — each head's
+    superposition becomes a convex combination of the *present* members
+    only, and the effective receiver noise is renormalized by the same
+    (smaller) row sum, i.e. fewer participants ⇒ noisier round, exactly
+    the physical behaviour.  Heads are always present (see
+    :func:`participation_weights`).  ``mask=None`` and an all-ones mask
+    produce bit-identical coefficients.
     """
     A = phase1_weights(state)                                    # (C, K)
+    part = participation_weights(state, mask)
+    if part is not None:
+        A = A * part[None, :]
 
     # eq. (5): clients whose per-symbol power E‖θ‖²/d exceeds 1 scale down
     # to meet E‖x‖² ≤ P_k (precode_scale — per channel use, DESIGN.md §1).
@@ -228,7 +294,8 @@ def round_coefficients(state: CWFLState, stacked_params=None,
 
 
 def _aggregate_flat(stacked_params, state: CWFLState, key: jax.Array,
-                    normalize: bool, precode: bool):
+                    normalize: bool, precode: bool,
+                    mask: Optional[jnp.ndarray] = None):
     """Flatten-once fast path: one (K, d) matrix through the fused
     single-pass round kernel instead of the per-leaf ``_mix_rows`` loop.
     The noise stream replicates the per-leaf path exactly (same key
@@ -239,7 +306,7 @@ def _aggregate_flat(stacked_params, state: CWFLState, key: jax.Array,
     C = state.num_clusters
     k1, k2 = jax.random.split(key)
     A, eff_std1, B, kappa, m_back = round_coefficients(
-        state, stacked_params, normalize, precode)
+        state, stacked_params, normalize, precode, mask)
 
     flat = jnp.concatenate(
         [x.reshape(K, -1).astype(jnp.float32) for x in leaves], axis=1)
@@ -263,7 +330,8 @@ def _aggregate_flat(stacked_params, state: CWFLState, key: jax.Array,
 
 def aggregate(stacked_params, state: CWFLState, key: jax.Array,
               normalize: bool = True, precode: bool = True,
-              flat: Optional[bool] = None):
+              flat: Optional[bool] = None,
+              mask: Optional[jnp.ndarray] = None):
     """One CWFL sync round. Returns (new_stacked_params, consensus_mean).
 
     ``stacked_params``: pytree, every leaf (K, ...).
@@ -281,17 +349,22 @@ def aggregate(stacked_params, state: CWFLState, key: jax.Array,
       performs between phases are all no-ops).  Non-f32 trees default to
       the per-leaf path, whose between-phase rounding they depend on;
       ``flat=True`` forces the fast path (f32 accumulation end-to-end).
+    ``mask``: optional (K,) {0,1} per-round participation folded into the
+      round coefficients (mask-aware renormalization, see
+      :func:`round_coefficients`).  The transmit side only — deciding
+      whether absent clients still *receive* the phase-3 broadcast is the
+      scenario layer's job (`repro.sim.engine` keeps their local params).
     """
     if flat is None:
         flat = all(x.dtype == jnp.float32
                    for x in jax.tree.leaves(stacked_params))
     if flat:
         return _aggregate_flat(stacked_params, state, key, normalize,
-                               precode)
+                               precode, mask)
 
     k1, k2 = jax.random.split(key)
     A, eff_std1, B, kappa, m_back = round_coefficients(
-        state, stacked_params, normalize, precode)
+        state, stacked_params, normalize, precode, mask)
 
     # Phase 1: OTA superposition at each head + receiver AWGN (eq. 8).
     theta_tilde = _mix_rows(A, stacked_params, k1, eff_std1)

@@ -51,6 +51,33 @@ class Topology:
         return 10.0 * jnp.log10(jnp.maximum(self.link_snr, 1e-12))
 
 
+def pathloss_amplitude(positions: jnp.ndarray,
+                       cfg: TopologyConfig) -> jnp.ndarray:
+    """(K, K) amplitude pathloss (d/d0)^{-ς/2} from positions — the single
+    source of the distance convention (ε-regularized distance, clamp at
+    d0), shared with the time-varying channel view in
+    `repro.sim.processes` so per-round re-derivations can never drift
+    from the seed topology's rules."""
+    diff = positions[:, None, :] - positions[None, :, :]
+    dist = jnp.sqrt(jnp.sum(diff**2, axis=-1) + 1e-9)
+    dist = jnp.maximum(dist, cfg.d0)
+    return (dist / cfg.d0) ** (-cfg.pathloss_exp / 2.0)
+
+
+def link_stats(link_gain: jnp.ndarray, cfg: TopologyConfig):
+    """(link_snr, adjacency) from a (K, K) complex gain matrix: SNR at the
+    equal-split reference power P/K and the dB-threshold outage pruning —
+    shared with `repro.sim.processes.channel_view` (same rationale as
+    :func:`pathloss_amplitude`)."""
+    K = link_gain.shape[0]
+    p_ref = cfg.total_power / K
+    link_snr = (jnp.abs(link_gain) ** 2) * p_ref / cfg.noise_var
+    link_snr = link_snr * (1.0 - jnp.eye(K))
+    snr_db = 10.0 * jnp.log10(jnp.maximum(link_snr, 1e-12))
+    adjacency = (snr_db >= cfg.outage_snr_db) & ~jnp.eye(K, dtype=bool)
+    return link_snr, adjacency
+
+
 def make_topology(key: jax.Array, cfg: Optional[TopologyConfig] = None) -> Topology:
     """Draw a stationary topology (paper: channel constant across rounds)."""
     cfg = cfg or TopologyConfig()
@@ -65,10 +92,7 @@ def make_topology(key: jax.Array, cfg: Optional[TopologyConfig] = None) -> Topol
     positions = hot[assign] + jitter
 
     # Pairwise distances and Rayleigh small-scale fading.
-    diff = positions[:, None, :] - positions[None, :, :]
-    dist = jnp.sqrt(jnp.sum(diff**2, axis=-1) + 1e-9)
-    dist = jnp.maximum(dist, cfg.d0)
-    pathloss_amp = (dist / cfg.d0) ** (-cfg.pathloss_exp / 2.0)
+    pathloss_amp = pathloss_amplitude(positions, cfg)
     re = jax.random.normal(k_re, (K, K)) / jnp.sqrt(2.0)
     im = jax.random.normal(k_im, (K, K)) / jnp.sqrt(2.0)
     h_tilde = re + 1j * im
@@ -78,13 +102,8 @@ def make_topology(key: jax.Array, cfg: Optional[TopologyConfig] = None) -> Topol
     link_gain = pathloss_amp * h_tilde
     link_gain = link_gain * (1.0 - jnp.eye(K))
 
-    # Link SNR at reference (equal-split) power P/K per client.
-    p_ref = cfg.total_power / K
-    link_snr = (jnp.abs(link_gain) ** 2) * p_ref / cfg.noise_var
-    link_snr = link_snr * (1.0 - jnp.eye(K))
-
-    snr_db = 10.0 * jnp.log10(jnp.maximum(link_snr, 1e-12))
-    adjacency = (snr_db >= cfg.outage_snr_db) & ~jnp.eye(K, dtype=bool)
+    # Link SNR at reference (equal-split) power P/K + outage pruning.
+    link_snr, adjacency = link_stats(link_gain, cfg)
 
     return Topology(
         positions=positions,

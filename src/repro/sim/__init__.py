@@ -1,0 +1,14 @@
+"""repro.sim — the scenario-simulation subsystem (DESIGN.md §Sim).
+
+Layers a *dynamic* wireless world on top of the paper's stationary model
+(`repro.core.topology`): time-varying channel processes, per-round client
+scheduling, and a fully-scanned Monte-Carlo round engine that runs entire
+FL trajectories on device (vmap-able over seeds and scenario scalars).
+"""
+from repro.sim.processes import (ChannelProcessConfig, ChannelState,
+                                 ChannelView, channel_view, csi_perturbation,
+                                 init_channel, step_channel)
+from repro.sim.scheduling import (ScheduleConfig, ScheduleState,
+                                  init_schedule, participation_mask)
+from repro.sim.scenarios import SCENARIOS, Scenario, get_scenario
+from repro.sim.engine import run_monte_carlo, run_rounds

@@ -1,0 +1,356 @@
+"""The scanned Monte-Carlo round engine (DESIGN.md §Sim).
+
+`run_federated` was a host Python loop: one jitted round, a
+``float(loss)`` device→host sync per round, one seed, one static channel.
+This engine runs the *whole trajectory* as a single ``lax.scan`` — T
+rounds on device, per-round loss/accuracy accumulated in on-device scan
+outputs — and is vmap-able over seeds and scenario scalars, so an
+8-seed × SNR-grid Monte-Carlo sweep compiles to exactly one jit.
+
+Round body (identical math to the pre-engine loop):
+
+    local:  E epochs of minibatch SGD per client   (vmap over K)
+    sync:   strategy aggregation — CWFL routes through the fused
+            `repro.kernels.cwfl_round` Pallas fast path via
+            ``cwfl.aggregate``'s flatten-once auto-route
+    eval:   consensus accuracy on the held-out set (on device)
+
+Scenario hooks (all `lax.scan`-carried, nothing touches the host):
+
+* time-varying channels  → per-round `state_from_plan` /
+  `cotaf_state_from_gains` / `decentralized_state_from_graph` rebuilds
+  from the `repro.sim.processes` channel view;
+* client scheduling      → participation masks folded into the round
+  coefficients (mask-aware renormalization) on the transmit side, and a
+  keep-local-params ``where`` on the receive side;
+* cluster churn          → periodic on-device re-clustering
+  (``lax.cond``-gated K-means + head election inside the scan body).
+
+Under the ``paper-static`` scenario the engine reproduces the
+pre-refactor `run_federated` history bit-for-bit (same key schedule, same
+per-round computation; ``mode="loop"`` replays the legacy per-round-jit
+structure for A/B benchmarking and the equivalence test).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, channel as ch, clustering as cl, cwfl
+from repro.core.topology import Topology, TopologyConfig
+from repro.models.small import accuracy as _accuracy
+from repro.optim import sgd
+from repro.sim.processes import (ChannelView, channel_view, csi_perturbation,
+                                 init_channel, step_channel)
+from repro.sim.scenarios import Scenario
+from repro.sim.scheduling import init_schedule, participation_mask
+from repro.training.federated import FLConfig, STRATEGIES
+from repro.training.local import make_local_runner
+
+# fold_in salt separating the scenario-process key stream (channel, masks,
+# CSI, re-clustering) from the paper's training stream — the static path
+# consumes exactly the pre-engine keys, bit-for-bit.
+_SIM_SALT = 0x51B
+
+# lax.scan unroll for the round loop.  At unroll=1 XLA compiles the while-
+# loop body with different elementwise fusion (FMA contraction) than the
+# standalone jitted round, which perturbs the precoded strategies
+# (cwfl/cotaf: the per_client_mean_sq → amplitude-clip chain) by 1 ulp per
+# round; at unroll=2 the loop body fuses identically to the sequential
+# jit and the whole trajectory is bit-identical to the legacy per-round
+# loop (verified for odd/even T in tests/test_sim_engine.py).
+_SCAN_UNROLL = 2
+
+
+def _tree_where(mask: jnp.ndarray, a, b):
+    """Per-leaf ``where(mask_k, a_k, b_k)`` over K-stacked pytrees."""
+    def pick(x, y):
+        m = mask.reshape((mask.shape[0],) + (1,) * (x.ndim - 1))
+        return jnp.where(m > 0, x, y)
+    return jax.tree.map(pick, a, b)
+
+
+def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
+           topology: Topology, xs: jnp.ndarray, ys: jnp.ndarray,
+           x_test: jnp.ndarray, y_test: jnp.ndarray, cfg: FLConfig,
+           scenario: Scenario, topo_cfg: Optional[TopologyConfig]):
+    """Returns ``(prepare, body)``: ``prepare(seed, snr_db)`` builds the
+    scan carry + per-round inputs, ``body`` is the round function.  Both
+    are pure jnp — jit them together (scan mode, Monte-Carlo vmap) or
+    run `prepare` eagerly and jit `body` alone (legacy loop mode)."""
+    if cfg.strategy not in STRATEGIES:
+        raise KeyError(f"unknown strategy {cfg.strategy!r}; "
+                       f"choose from {sorted(STRATEGIES)}")
+    setup_fn, aggregate_fn = STRATEGIES[cfg.strategy]
+
+    K, n_k = xs.shape[0], xs.shape[1]
+    static = scenario.is_static
+    dyn_chan = scenario.channel.evolves_geometry  # CSI-only needs no geometry
+    masked = not scenario.schedule.is_trivial
+    recluster = scenario.recluster_every
+    total_power = float(topology.total_power)
+    if dyn_chan and topo_cfg is None:
+        raise ValueError(
+            "dynamic-channel scenarios need the TopologyConfig that "
+            "generated the topology (geometry statics: area, d0, ς, "
+            "outage threshold)")
+
+    optimizer = sgd(cfg.lr)
+    steps_per_round = max(cfg.local_epochs * (n_k // cfg.batch_size), 1)
+    local_run = make_local_runner(loss_fn, optimizer, cfg.batch_size,
+                                  steps_per_round, cfg.mu_prox)
+    x_ev = x_test[: cfg.eval_samples]
+    y_ev = y_test[: cfg.eval_samples]
+
+    def prepare(seed, snr_db):
+        key = jax.random.PRNGKey(seed)
+        k_state, k_init, k_rounds = jax.random.split(key, 3)
+        state0 = setup_fn(topology, k_state, num_clusters=cfg.num_clusters,
+                          snr_db=snr_db)
+        params0 = init_fn(k_init)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (K,) + x.shape), params0)
+        opt_state = jax.vmap(optimizer.init)(stacked)
+        round_keys = jax.random.split(k_rounds, cfg.rounds)
+
+        carry = {"stacked": stacked, "opt": opt_state, "consensus": params0}
+        scan_xs = {"rkey": round_keys}
+        if not static:
+            scan_xs["skey"] = jax.random.split(
+                jax.random.fold_in(key, _SIM_SALT), cfg.rounds)
+            scan_xs["t"] = jnp.arange(cfg.rounds)
+            nv = (topology.noise_var if snr_db is None
+                  else ch.snr_db_to_noise_var(total_power, snr_db))
+            if masked:
+                carry["sched"] = init_schedule(scenario.schedule, K)
+            if dyn_chan:
+                carry["chan"] = init_channel(
+                    topology, topo_cfg, jax.random.fold_in(key, _SIM_SALT + 1))
+            if cfg.strategy == "cwfl" and recluster > 0:
+                carry["plan"] = state0.plan
+            state0 = (state0, jnp.asarray(nv, jnp.float32))
+        return state0, carry, scan_xs
+
+    def make_body(ctx):
+        """Bind the per-trajectory context (strategy state; + noise var in
+        dynamic mode) into the round body as a CLOSURE, exactly like the
+        legacy ``round_fn``'s jit closure — with eager `prepare` the
+        static-scenario round compiles with the state embedded as
+        constants, which keeps the history bit-identical to the
+        pre-engine loop (argument-vs-constant changes XLA fusion by ulps).
+        """
+        if static:
+            state0, nv = ctx, None
+        else:
+            state0, nv = ctx
+
+        def dynamic_sync(carry, stacked, inp, k_agg):
+            """One scenario-aware sync: channel step → state rebuild →
+            masked aggregation.  Mutates ``carry`` (a per-round copy)."""
+            t = inp["t"]
+            k_chan, k_csi, k_mask, k_cluster = jax.random.split(
+                inp["skey"], 4)
+
+            if dyn_chan:
+                chan = step_channel(carry["chan"], scenario.channel, topo_cfg,
+                                    k_chan)
+                carry["chan"] = chan
+                view = channel_view(chan, topo_cfg)
+            else:
+                view = ChannelView(link_gain=topology.link_gain,
+                                   link_snr=topology.link_snr,
+                                   adjacency=topology.adjacency)
+
+            mask = None
+            if masked:
+                mask, carry["sched"] = participation_mask(
+                    scenario.schedule, carry["sched"], t, k_mask, K)
+            # Imperfect CSI hits every strategy that water-fills power
+            # from channel estimates (CWFL member→head, COTAF →server).
+            csi = (csi_perturbation(k_csi, K, scenario.channel.csi_error_std)
+                   if scenario.channel.csi_error_std > 0 else None)
+            recv = mask   # who gets the downlink (may widen below)
+
+            if cfg.strategy == "cwfl":
+                if recluster > 0:
+                    plan = jax.lax.cond(
+                        (t % recluster) == 0,
+                        lambda: cl.make_cluster_plan(
+                            view.link_snr, view.adjacency, cfg.num_clusters,
+                            k_cluster),
+                        lambda: carry["plan"])
+                    carry["plan"] = plan
+                else:
+                    plan = state0.plan
+                state = cwfl.state_from_plan(plan, view.link_gain,
+                                             total_power, nv,
+                                             csi_perturb=csi)
+                new, consensus = cwfl.aggregate(stacked, state, k_agg,
+                                                mask=mask)
+                if mask is not None:
+                    # Heads are forced present on the transmit side
+                    # (cwfl.participation_weights) — they ARE the phase-1/2
+                    # receivers — so they must also keep the aggregate they
+                    # computed rather than revert to their local params.
+                    recv = cwfl.participation_weights(state, mask)
+            elif cfg.strategy == "cotaf":
+                state = baselines.cotaf_state_from_gains(
+                    view.link_gain, total_power, nv, csi_perturb=csi)
+                new, consensus = baselines.cotaf_aggregate(stacked, state,
+                                                           k_agg, mask=mask)
+                if mask is not None:
+                    # Same receiver rule as CWFL heads: the server holds
+                    # the aggregate, so it keeps it.
+                    recv = baselines.cotaf_participation(state, mask)
+            elif cfg.strategy == "fedavg":
+                new, consensus = baselines.fedavg_aggregate(stacked,
+                                                            weights=mask)
+            else:  # decentralized: prune the graph instead of masking the
+                # MAC — Metropolis weights give isolated (absent) nodes
+                # W(k,k)=1, so they keep their parameters with zero noise.
+                adj = view.adjacency
+                if mask is not None:
+                    mb = mask > 0
+                    adj = adj & mb[:, None] & mb[None, :]
+                state = baselines.decentralized_state_from_graph(
+                    adj, total_power, nv)
+                new, consensus = baselines.decentralized_aggregate(
+                    stacked, state, k_agg)
+                mask = None
+
+            if mask is not None:
+                # Receive side: absent clients keep their locally-trained
+                # params (no downlink for a client out of the round); if
+                # NOBODY participated the sync is skipped and the previous
+                # consensus stands (also swallows fedavg's 0/0 weights).
+                present = jnp.sum(mask) > 0
+                new = _tree_where(recv * present, new, stacked)
+                consensus = jax.tree.map(
+                    lambda n, o: jnp.where(present, n, o),
+                    consensus, carry["consensus"])
+            return new, consensus
+
+        def body(carry, inp):
+            carry = dict(carry)
+            k_local, k_agg = jax.random.split(inp["rkey"])
+            client_keys = jax.random.split(k_local, K)
+            stacked, opt_state, losses = jax.vmap(local_run)(
+                carry["stacked"], carry["opt"], xs, ys, client_keys)
+            if static:
+                stacked, consensus = aggregate_fn(stacked, state0, k_agg)
+            else:
+                stacked, consensus = dynamic_sync(carry, stacked, inp, k_agg)
+            logits = apply_fn(consensus, x_ev)
+            acc = _accuracy(logits, y_ev)
+            carry.update(stacked=stacked, opt=opt_state, consensus=consensus)
+            return carry, (jnp.mean(losses), acc)
+
+        return body
+
+    return prepare, make_body
+
+
+def run_rounds(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
+               topology: Topology, xs: jnp.ndarray, ys: jnp.ndarray,
+               x_test: jnp.ndarray, y_test: jnp.ndarray, cfg: FLConfig,
+               scenario: Optional[Scenario] = None,
+               topo_cfg: Optional[TopologyConfig] = None,
+               mode: str = "scan",
+               progress: Optional[Callable] = None) -> dict[str, Any]:
+    """Run one FL trajectory; returns history with on-device arrays.
+
+    ``mode="scan"`` (default): the whole trajectory is one jit — no
+    per-round host sync; metrics come back as (T,) arrays.
+    ``mode="loop"``: the legacy per-round-jit host loop (bit-identical
+    history; supports a live per-round ``progress(r, loss, acc)``
+    callback, and is the baseline the scan speedup is measured against).
+    """
+    scenario = scenario or Scenario()
+    prepare, make_body = _build(init_fn, apply_fn, loss_fn, topology, xs, ys,
+                                x_test, y_test, cfg, scenario, topo_cfg)
+    T = cfg.rounds
+
+    # `prepare` runs EAGERLY in both modes — the same eager/jit boundary the
+    # legacy loop had (offline setup + init op-by-op, rounds compiled), so
+    # the scanned trajectory stays bit-identical to it; only Monte-Carlo
+    # sweeps trace `prepare` (under vmap over seeds/scenario scalars).
+    ctx, carry, scan_xs = prepare(cfg.seed, cfg.snr_db)
+    body = make_body(ctx)
+
+    if mode == "scan":
+        carry, (loss, acc) = jax.jit(
+            lambda c, x: jax.lax.scan(body, c, x, unroll=_SCAN_UNROLL))(
+                carry, scan_xs)
+        consensus = carry["consensus"]
+    elif mode == "loop":
+        body_j = jax.jit(body)
+        loss_l, acc_l = [], []
+        for t in range(T):
+            inp = jax.tree.map(lambda x: x[t], scan_xs)
+            carry, (l, a) = body_j(carry, inp)
+            loss_l.append(l)
+            acc_l.append(a)
+            if progress is not None:
+                progress(t + 1, float(l), float(a))
+        consensus = carry["consensus"]
+        loss, acc = jnp.stack(loss_l), jnp.stack(acc_l)
+    else:
+        raise ValueError(f"mode must be 'scan' or 'loop', got {mode!r}")
+
+    return {
+        "round": np.arange(1, T + 1),
+        "train_loss": loss,
+        "test_acc": acc,
+        "final_params": consensus,
+        "avg_acc": jnp.mean(acc),
+        "final_acc": acc[-1],
+    }
+
+
+def run_monte_carlo(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
+                    topology: Topology, xs: jnp.ndarray, ys: jnp.ndarray,
+                    x_test: jnp.ndarray, y_test: jnp.ndarray, cfg: FLConfig,
+                    scenario: Optional[Scenario] = None,
+                    topo_cfg: Optional[TopologyConfig] = None,
+                    seeds: int = 8,
+                    snr_grid=None) -> dict[str, Any]:
+    """Monte-Carlo grid: ``seeds`` × ``snr_grid`` full trajectories in ONE
+    jit (vmap over the seed axis, vmap over the scenario-scalar axis,
+    `lax.scan` over rounds inside).
+
+    ``snr_grid`` defaults to ``scenario.snr_grid`` when the scenario
+    defines one (e.g. ``snr-sweep``); ``None``/empty sweeps only seeds.
+    Returns ``train_loss``/``test_acc`` of shape (S, T) or (S, G, T).
+    """
+    scenario = scenario or Scenario()
+    if snr_grid is None and scenario.snr_grid:
+        snr_grid = scenario.snr_grid
+    prepare, make_body = _build(init_fn, apply_fn, loss_fn, topology, xs, ys,
+                                x_test, y_test, cfg, scenario, topo_cfg)
+
+    def traj(seed, snr_db):
+        ctx, carry0, scan_xs = prepare(seed, snr_db)
+        _, (loss, acc) = jax.lax.scan(make_body(ctx), carry0, scan_xs,
+                                      unroll=_SCAN_UNROLL)
+        return loss, acc
+
+    seed_arr = jnp.asarray(cfg.seed + np.arange(seeds))
+    if snr_grid is None:
+        loss, acc = jax.jit(jax.vmap(traj, in_axes=(0, None)))(
+            seed_arr, cfg.snr_db)
+        grid = None
+    else:
+        grid = jnp.asarray(snr_grid, jnp.float32)
+        loss, acc = jax.jit(
+            jax.vmap(jax.vmap(traj, in_axes=(None, 0)),
+                     in_axes=(0, None)))(seed_arr, grid)
+    return {
+        "train_loss": loss,
+        "test_acc": acc,
+        "final_acc": acc[..., -1],
+        "seeds": seed_arr,
+        "snr_grid": grid,
+    }

@@ -1,0 +1,169 @@
+"""Time-varying channel processes layered on `repro.core.topology` (§Sim).
+
+The paper evaluates under a single stationary topology ("channel constant
+across rounds").  This module makes every ingredient of that topology a
+*process* indexed by the round t, so the scanned engine can re-derive the
+per-round channel view entirely on device:
+
+* **Block Rayleigh fading, Gauss-Markov correlated** (the standard
+  first-order model, cf. arXiv 2207.09232):
+      h̃_{t+1} = ρ h̃_t + sqrt(1 − ρ²) w_t,   w_t ~ CN(0, 1) symmetric,
+  so E|h̃_t|² = 1 for all t and ρ = 1 recovers the paper's static channel
+  bit-for-bit (the innovation term is multiplied by exactly 0.0).
+
+* **Log-normal shadowing**, AR(1) in dB:
+      s_{t+1} = ρ_sh s_t + sqrt(1 − ρ_sh²) n_t,  n_t ~ N(0, σ_sh²) (dB),
+  entering the amplitude as 10^{s/20} (symmetric across each link).
+
+* **Random-waypoint mobility**: each client moves toward its waypoint at
+  ``speed`` m/round; on arrival it draws a fresh waypoint uniformly in the
+  deployment area.  Positions re-derive pathloss, link SNR and the
+  outage-pruned adjacency every round — exactly `make_topology`'s rules.
+
+* **Imperfect CSI**: a mean-one log-normal perturbation of the effective
+  water-filling gains (`csi_perturbation`) — the power allocator sees a
+  noisy channel estimate while the *true* channel still carries the
+  signal (`cwfl.state_from_plan(csi_perturb=...)`).
+
+State lives in a NamedTuple (a pytree) so it rides the engine's
+``lax.scan`` carry; all steps are pure jnp and vmap-able over seeds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topology import (Topology, TopologyConfig, link_stats,
+                                 pathloss_amplitude)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelProcessConfig:
+    """Knobs of the round-indexed channel process (all off ⇒ paper-static)."""
+
+    fading_rho: float = 1.0        # Gauss-Markov round-to-round correlation ρ
+    shadowing_std_db: float = 0.0  # log-normal shadowing σ_sh (dB)
+    shadowing_rho: float = 0.9     # AR(1) correlation of the shadowing (dB)
+    speed: float = 0.0             # random-waypoint speed (m / round)
+    csi_error_std: float = 0.0     # log-std of the water-filling gain error
+
+    @property
+    def evolves_geometry(self) -> bool:
+        """True when the *channel itself* changes across rounds (fading,
+        shadowing, mobility) — i.e. the engine must carry process state
+        and re-derive the per-round channel view (needs a
+        TopologyConfig).  CSI error alone does NOT qualify: it only
+        perturbs the (K,) water-filling gains seen by the allocator."""
+        return (self.fading_rho < 1.0 or self.shadowing_std_db > 0.0
+                or self.speed > 0.0)
+
+    @property
+    def is_dynamic(self) -> bool:
+        """True when any per-round re-derivation is needed (geometry
+        evolution or per-round CSI redraws)."""
+        return self.evolves_geometry or self.csi_error_std > 0.0
+
+
+class ChannelState(NamedTuple):
+    """Scan-carried state of the channel process."""
+
+    positions: jnp.ndarray     # (K, 2) client positions
+    waypoints: jnp.ndarray     # (K, 2) random-waypoint targets
+    h_tilde: jnp.ndarray       # (K, K) complex small-scale fading, E|h|² = 1
+    shadow_db: jnp.ndarray     # (K, K) symmetric shadowing (dB)
+
+
+class ChannelView(NamedTuple):
+    """One round's realized channel — the Topology fields that vary."""
+
+    link_gain: jnp.ndarray     # (K, K) complex gains (diag = 0)
+    link_snr: jnp.ndarray      # (K, K) |h|² P_ref / σ² (diag = 0)
+    adjacency: jnp.ndarray     # (K, K) bool outage-pruned graph
+
+
+def _symmetrize(m: jnp.ndarray, conj: bool) -> jnp.ndarray:
+    """Mirror the strict upper triangle (channel reciprocity)."""
+    K = m.shape[0]
+    iu = jnp.triu(jnp.ones((K, K), bool), k=1)
+    return jnp.where(iu, m, jnp.conj(m.T) if conj else m.T)
+
+
+def _cn_symmetric(key: jax.Array, K: int) -> jnp.ndarray:
+    """Symmetric CN(0, 1) draw — same convention as `make_topology`."""
+    k_re, k_im = jax.random.split(key)
+    re = jax.random.normal(k_re, (K, K)) / jnp.sqrt(2.0)
+    im = jax.random.normal(k_im, (K, K)) / jnp.sqrt(2.0)
+    return _symmetrize(re + 1j * im, conj=True)
+
+
+def init_channel(topology: Topology, tcfg: TopologyConfig,
+                 key: jax.Array) -> ChannelState:
+    """Seed the process *at* the given stationary topology: the recovered
+    fading state reproduces ``topology.link_gain`` exactly at round 0, so
+    a process with all knobs off is the paper's channel, not merely a
+    statistically equivalent one."""
+    K = topology.num_clients
+    pathloss = pathloss_amplitude(topology.positions, tcfg)
+    h_tilde = jnp.where(jnp.eye(K, dtype=bool), 0.0,
+                        topology.link_gain / pathloss)
+    waypoints = jax.random.uniform(key, (K, 2)) * tcfg.area_size
+    return ChannelState(positions=topology.positions, waypoints=waypoints,
+                        h_tilde=h_tilde,
+                        shadow_db=jnp.zeros((K, K), jnp.float32))
+
+
+def step_channel(state: ChannelState, cfg: ChannelProcessConfig,
+                 tcfg: TopologyConfig, key: jax.Array) -> ChannelState:
+    """Advance the process one round (pure; scan-body safe)."""
+    k_fade, k_shadow, k_way = jax.random.split(key, 3)
+    K = state.positions.shape[0]
+
+    # Random-waypoint mobility.
+    to_target = state.waypoints - state.positions
+    dist = jnp.sqrt(jnp.sum(to_target ** 2, axis=-1, keepdims=True) + 1e-12)
+    arrived = dist[:, 0] <= cfg.speed
+    step = jnp.minimum(cfg.speed / dist, 1.0) * to_target
+    positions = state.positions + step
+    fresh = jax.random.uniform(k_way, (K, 2)) * tcfg.area_size
+    waypoints = jnp.where(arrived[:, None], fresh, state.waypoints)
+
+    # Gauss-Markov Rayleigh fading (ρ = 1 ⇒ exactly static).
+    rho = jnp.float32(cfg.fading_rho)
+    innov = _cn_symmetric(k_fade, K)
+    h_tilde = rho * state.h_tilde + jnp.sqrt(
+        jnp.maximum(1.0 - rho ** 2, 0.0)) * innov
+
+    # AR(1) log-normal shadowing in dB (stationary variance σ_sh²).
+    rho_s = jnp.float32(cfg.shadowing_rho)
+    n = _symmetrize(
+        cfg.shadowing_std_db * jax.random.normal(k_shadow, (K, K)),
+        conj=False)
+    shadow_db = rho_s * state.shadow_db + jnp.sqrt(
+        jnp.maximum(1.0 - rho_s ** 2, 0.0)) * n
+
+    return ChannelState(positions=positions, waypoints=waypoints,
+                        h_tilde=h_tilde, shadow_db=shadow_db)
+
+
+def channel_view(state: ChannelState, tcfg: TopologyConfig) -> ChannelView:
+    """Realize one round's gains/SNRs/graph from the process state via
+    `make_topology`'s own helpers (`pathloss_amplitude`, `link_stats`) —
+    reference equal-split power P/K, dB outage threshold, no self-links."""
+    K = state.positions.shape[0]
+    off = 1.0 - jnp.eye(K)
+    amp = pathloss_amplitude(state.positions, tcfg) * (
+        10.0 ** (state.shadow_db / 20.0))
+    link_gain = amp * state.h_tilde * off
+    link_snr, adjacency = link_stats(link_gain, tcfg)
+    return ChannelView(link_gain=link_gain, link_snr=link_snr,
+                       adjacency=adjacency)
+
+
+def csi_perturbation(key: jax.Array, K: int, log_std: float) -> jnp.ndarray:
+    """(K,) mean-one log-normal factor exp(σ z − σ²/2) for the
+    water-filling gains — imperfect CSI at the power allocator."""
+    z = jax.random.normal(key, (K,))
+    return jnp.exp(log_std * z - 0.5 * log_std ** 2)

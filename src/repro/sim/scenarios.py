@@ -1,0 +1,75 @@
+"""Named scenario registry — the workloads the engine knows how to run.
+
+A `Scenario` bundles a channel process, a participation schedule, a
+re-clustering cadence and (optionally) an SNR grid for Monte-Carlo
+sweeps.  `get_scenario(name)` resolves the registry; scenarios are plain
+frozen dataclasses so CLIs / tests can also build ad-hoc ones.
+
+Registry (see DESIGN.md §Sim for the math behind each knob):
+
+* ``paper-static``    — the paper's §V protocol verbatim: stationary
+  channel, full participation.  The engine's trajectory under this
+  scenario is bit-identical to the pre-engine `run_federated` loop.
+* ``mobile-fading``   — random-waypoint mobility + Gauss-Markov fading +
+  log-normal shadowing + imperfect CSI (cf. arXiv 2207.09232's mobile
+  hierarchical setting).
+* ``straggler-heavy`` — 25% i.i.d. dropout plus three deterministic
+  stragglers missing every third round, on the static channel.
+* ``snr-sweep``       — static channel, Monte-Carlo grid over overall
+  SNR ξ ∈ {0, 10, 20, 30, 40} dB (the x-axis of the paper's noise-floor
+  claims); `run_monte_carlo` vmaps the whole grid into one jit.
+* ``cluster-churn``   — fading + mobility strong enough that the SNR
+  landscape drifts, with periodic on-device re-clustering every 5 rounds
+  (K-means + head election inside the scan, `lax.cond`-gated).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.sim.processes import ChannelProcessConfig
+from repro.sim.scheduling import ScheduleConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str = "paper-static"
+    channel: ChannelProcessConfig = ChannelProcessConfig()
+    schedule: ScheduleConfig = ScheduleConfig()
+    recluster_every: int = 0              # re-run clustering every n rounds (0=never)
+    snr_grid: Tuple[float, ...] = ()      # Monte-Carlo SNR axis (dB); () = cfg.snr_db
+
+    @property
+    def is_static(self) -> bool:
+        """True ⇒ the engine takes the bit-exact paper-static fast path."""
+        return (not self.channel.is_dynamic and self.schedule.is_trivial
+                and self.recluster_every <= 0)
+
+
+SCENARIOS = {
+    "paper-static": Scenario(),
+    "mobile-fading": Scenario(
+        name="mobile-fading",
+        channel=ChannelProcessConfig(fading_rho=0.9, shadowing_std_db=4.0,
+                                     shadowing_rho=0.9, speed=2.0,
+                                     csi_error_std=0.1)),
+    "straggler-heavy": Scenario(
+        name="straggler-heavy",
+        schedule=ScheduleConfig(dropout_prob=0.25, num_stragglers=3,
+                                straggler_period=3)),
+    "snr-sweep": Scenario(
+        name="snr-sweep",
+        snr_grid=(0.0, 10.0, 20.0, 30.0, 40.0)),
+    "cluster-churn": Scenario(
+        name="cluster-churn",
+        channel=ChannelProcessConfig(fading_rho=0.95, speed=4.0,
+                                     shadowing_std_db=2.0),
+        recluster_every=5),
+}
+
+
+def get_scenario(name: str) -> Scenario:
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"choose from {sorted(SCENARIOS)}")
+    return SCENARIOS[name]

@@ -1,0 +1,78 @@
+"""Per-round client participation (dropouts, stragglers, energy budgets).
+
+A round's participation mask m_t ∈ {0,1}^K is folded into the OTA round
+coefficients by `repro.core.cwfl.round_coefficients(mask=...)` /
+`baselines.cotaf_aggregate(mask=...)`: absent clients get a zero column in
+the phase-1 amplitude matrix Ã *before* the convex renormalization, so
+they neither transmit power nor bias the superposition, and the effective
+receiver noise renormalizes by the (smaller) present-member row sum.
+Cluster-heads are always present (see `cwfl.participation_weights`).
+
+Three independent mechanisms compose (logical AND):
+
+* **Bernoulli dropout** — each client independently absent w.p. p_drop
+  (fast fading of the control link / app-level jitter).
+* **Deterministic stragglers** — clients 0..S−1 miss every round with
+  t ≡ period−1 (mod period): the reproducible worst case for debugging
+  and for the `straggler-heavy` scenario.
+* **Energy budgets** — each client can afford ``energy_budget``
+  transmissions; once spent, it goes permanently silent (battery death).
+  Participation decrements the budget; sitting out doesn't.  The budget
+  tracks *scheduled* member uplinks only: cluster-heads/servers that the
+  aggregation layer forces present (`cwfl.participation_weights`,
+  `baselines.cotaf_participation`) act as receivers whose phase-2 /
+  local costs sit outside this model, so a forced-present round is not
+  charged.
+
+State is a NamedTuple pytree so it rides the engine's scan carry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    dropout_prob: float = 0.0     # per-round i.i.d. absence probability
+    num_stragglers: int = 0       # clients 0..S-1 straggle deterministically
+    straggler_period: int = 0     # straggle when t % period == period-1 (0=off)
+    energy_budget: float = 0.0    # max participations per client (0 = ∞)
+
+    @property
+    def is_trivial(self) -> bool:
+        """True when every mechanism is off ⇒ the engine skips masking
+        entirely (bit-identical to the pre-mask code path)."""
+        return (self.dropout_prob <= 0.0
+                and (self.num_stragglers <= 0 or self.straggler_period <= 0)
+                and self.energy_budget <= 0.0)
+
+
+class ScheduleState(NamedTuple):
+    energy_left: jnp.ndarray      # (K,) remaining transmissions (∞ = unbounded)
+
+
+def init_schedule(cfg: ScheduleConfig, num_clients: int) -> ScheduleState:
+    budget = cfg.energy_budget if cfg.energy_budget > 0 else jnp.inf
+    return ScheduleState(
+        energy_left=jnp.full((num_clients,), budget, jnp.float32))
+
+
+def participation_mask(cfg: ScheduleConfig, state: ScheduleState,
+                       t: jnp.ndarray, key: jax.Array, num_clients: int
+                       ) -> Tuple[jnp.ndarray, ScheduleState]:
+    """One round's mask. Returns ((K,) float {0,1}, new state)."""
+    K = num_clients
+    alive = state.energy_left > 0.0
+    keep = jax.random.bernoulli(key, 1.0 - cfg.dropout_prob, (K,))
+    if cfg.num_stragglers > 0 and cfg.straggler_period > 0:
+        slow = jnp.arange(K) < cfg.num_stragglers
+        late = (t % cfg.straggler_period) == (cfg.straggler_period - 1)
+        straggle = slow & late
+    else:
+        straggle = jnp.zeros((K,), bool)
+    mask = (alive & keep & ~straggle).astype(jnp.float32)
+    return mask, ScheduleState(energy_left=state.energy_left - mask)

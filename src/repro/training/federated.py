@@ -1,23 +1,21 @@
-"""The federated round engine (Algorithm 1 + baselines, vmapped over clients).
+"""The federated strategy registry + compatibility front door.
 
 One round = E local epochs at every client in parallel (vmap) followed by one
-synchronization (t ∈ H) under the selected aggregation strategy.  The whole
-round is a single jitted function; clients are the leading axis of every
-parameter leaf.
+synchronization (t ∈ H) under the selected aggregation strategy.  The round
+loop itself lives in :mod:`repro.sim.engine` (a `lax.scan` over rounds,
+vmap-able over seeds/scenario scalars); `run_federated` is the stable
+paper-protocol entry point wrapping it.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Callable, Optional
 
-import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import baselines, cwfl
 from repro.core.topology import Topology
-from repro.models.small import accuracy as _accuracy
-from repro.optim import sgd
-from repro.training.local import make_local_runner
 
 
 # ---------------------------------------------------------------------------
@@ -76,63 +74,34 @@ class FLConfig:
 def run_federated(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
                   topology: Topology, xs: jnp.ndarray, ys: jnp.ndarray,
                   x_test: jnp.ndarray, y_test: jnp.ndarray,
-                  cfg: FLConfig, progress: Optional[Callable] = None
-                  ) -> dict[str, Any]:
+                  cfg: FLConfig, progress: Optional[Callable] = None,
+                  scenario=None, topo_cfg=None) -> dict[str, Any]:
     """Run FL; returns history dict with per-round test accuracy/loss.
 
     ``xs, ys``: stacked client shards (K, N_k, ...).
+
+    Compatibility wrapper over the scenario engine
+    (:func:`repro.sim.engine.run_rounds`).  With the default (static)
+    scenario the scanned engine's history is bit-identical to the legacy
+    per-round Python loop this function used to implement; when a live
+    ``progress`` callback is given the engine's loop mode (same numbers,
+    per-round host sync) is used so the callback fires as rounds finish.
+    ``scenario``/``topo_cfg`` opt into `repro.sim` dynamics (time-varying
+    channels, participation masks, re-clustering).
     """
-    if cfg.strategy not in STRATEGIES:
-        raise KeyError(f"unknown strategy {cfg.strategy!r}; "
-                       f"choose from {sorted(STRATEGIES)}")
-    setup_fn, aggregate_fn = STRATEGIES[cfg.strategy]
+    from repro.sim.engine import run_rounds  # deferred: sim imports us
 
-    K, n_k = xs.shape[0], xs.shape[1]
-    key = jax.random.PRNGKey(cfg.seed)
-    k_state, k_init, k_rounds = jax.random.split(key, 3)
+    mode = "loop" if progress is not None else "scan"
+    h = run_rounds(init_fn, apply_fn, loss_fn, topology, xs, ys,
+                   x_test, y_test, cfg, scenario=scenario,
+                   topo_cfg=topo_cfg, mode=mode, progress=progress)
 
-    state = setup_fn(topology, k_state, num_clusters=cfg.num_clusters,
-                     snr_db=cfg.snr_db)
-
-    # Same initialization at all clients (Algorithm 1: "Initialize parameters
-    # at all clients").
-    params0 = init_fn(k_init)
-    stacked = jax.tree.map(
-        lambda x: jnp.broadcast_to(x[None], (K,) + x.shape), params0)
-
-    optimizer = sgd(cfg.lr)
-    steps_per_round = max(cfg.local_epochs * (n_k // cfg.batch_size), 1)
-    local_run = make_local_runner(loss_fn, optimizer, cfg.batch_size,
-                                  steps_per_round, cfg.mu_prox)
-    opt_state = jax.vmap(optimizer.init)(stacked)
-
-    x_ev = x_test[: cfg.eval_samples]
-    y_ev = y_test[: cfg.eval_samples]
-
-    @jax.jit
-    def round_fn(stacked, opt_state, key):
-        k_local, k_agg = jax.random.split(key)
-        client_keys = jax.random.split(k_local, K)
-        stacked, opt_state, losses = jax.vmap(local_run)(
-            stacked, opt_state, xs, ys, client_keys)
-        stacked, consensus = aggregate_fn(stacked, state, k_agg)
-        logits = apply_fn(consensus, x_ev)
-        acc = _accuracy(logits, y_ev)
-        return stacked, opt_state, jnp.mean(losses), acc, consensus
-
-    history = {"round": [], "train_loss": [], "test_acc": []}
-    consensus = params0
-    round_keys = jax.random.split(k_rounds, cfg.rounds)
-    for r in range(cfg.rounds):
-        stacked, opt_state, loss, acc, consensus = round_fn(
-            stacked, opt_state, round_keys[r])
-        history["round"].append(r + 1)
-        history["train_loss"].append(float(loss))
-        history["test_acc"].append(float(acc))
-        if progress is not None:
-            progress(r + 1, float(loss), float(acc))
-
-    history["final_params"] = consensus
-    history["avg_acc"] = float(jnp.mean(jnp.asarray(history["test_acc"])))
+    history = {
+        "round": [int(r) for r in h["round"]],
+        "train_loss": [float(x) for x in np.asarray(h["train_loss"])],
+        "test_acc": [float(x) for x in np.asarray(h["test_acc"])],
+    }
+    history["final_params"] = h["final_params"]
+    history["avg_acc"] = float(h["avg_acc"])
     history["final_acc"] = history["test_acc"][-1]
     return history

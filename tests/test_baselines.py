@@ -44,6 +44,54 @@ def test_metropolis_doubly_stochastic_random_graphs():
         assert float(jnp.min(W)) >= 0.0
 
 
+def test_metropolis_outage_pruned_graphs_with_isolated_nodes():
+    """Satellite: symmetric doubly-stochastic on outage-pruned topologies,
+    including isolated (degree-0) nodes, which must self-mix with weight 1
+    — i.e. keep their parameters (the scenario engine models absent
+    clients exactly this way)."""
+    for seed in range(4):
+        topo = make_topology(jax.random.PRNGKey(seed),
+                             TopologyConfig(num_clients=12, num_hotspots=2,
+                                            outage_snr_db=25.0))  # sparse
+        adj = topo.adjacency
+        # force two isolated nodes on top of whatever outage produced
+        for k in (0, 7):
+            adj = adj.at[k, :].set(False).at[:, k].set(False)
+        W = bl.metropolis_weights(adj)
+        Wn = np.asarray(W)
+        np.testing.assert_allclose(Wn.sum(0), 1.0, atol=1e-5)
+        np.testing.assert_allclose(Wn.sum(1), 1.0, atol=1e-5)
+        np.testing.assert_allclose(Wn, Wn.T, atol=1e-6)
+        assert Wn.min() >= 0.0
+        assert Wn[0, 0] == pytest.approx(1.0) and Wn[7, 7] == pytest.approx(1.0)
+
+    # a fully-isolated graph degenerates to the identity (everyone keeps
+    # their params, zero effective noise)
+    W = bl.metropolis_weights(jnp.zeros((6, 6), bool))
+    np.testing.assert_allclose(np.asarray(W), np.eye(6), atol=1e-6)
+
+
+def test_cotaf_setup_is_traceable(topo):
+    """Satellite: server selection is a traced argmax (no host int() sync),
+    so COTAF setup can live inside jit/scan; the traced result matches the
+    eager one, and an explicit ``server`` pins the choice."""
+    eager = bl.cotaf_setup(topo, jax.random.PRNGKey(0), snr_db=40.0)
+    jitted = jax.jit(
+        lambda: bl.cotaf_setup(topo, jax.random.PRNGKey(0), snr_db=40.0))()
+    np.testing.assert_allclose(np.asarray(eager.client_power),
+                               np.asarray(jitted.client_power), rtol=1e-6)
+    # documented rule: server = argmax_k mean_j |h_kj|²
+    expect = int(jnp.argmax((jnp.abs(topo.link_gain) ** 2).mean(axis=1)))
+    pinned = bl.cotaf_setup(topo, jax.random.PRNGKey(0), snr_db=40.0,
+                            server=expect)
+    np.testing.assert_allclose(np.asarray(eager.client_power),
+                               np.asarray(pinned.client_power), rtol=1e-6)
+    other = bl.cotaf_setup(topo, jax.random.PRNGKey(0), snr_db=40.0,
+                           server=(expect + 1) % topo.num_clients)
+    assert not np.allclose(np.asarray(other.client_power),
+                           np.asarray(eager.client_power))
+
+
 def test_decentralized_consensus_converges_to_mean():
     """Iterating the noiseless mixing reaches the global average (eq. 3's
     consensus property — requires a CONNECTED graph, so disable outage)."""

@@ -32,6 +32,34 @@ def test_water_filling_equal_gains_equal_power():
 
 
 @settings(deadline=None, max_examples=30)
+@given(
+    gains=st.lists(st.floats(1e-3, 1e3), min_size=2, max_size=24),
+    power=st.floats(0.5, 1e4),
+)
+def test_water_filling_monotone_in_gains(gains, power):
+    """P_k = max(µ − 1/g_k, 0) is nondecreasing in g_k: a better channel
+    never receives less power (property, any gains/power)."""
+    g = jnp.asarray(gains)
+    p = np.asarray(ch.water_filling(g, power))
+    order = np.argsort(np.asarray(g))
+    assert (np.diff(p[order]) >= -1e-3 * power).all()
+
+
+def test_water_filling_all_tiny_gains_equal_split():
+    """Degenerate branch: gains below the 1e-12 clamp make the bisection
+    residual collapse — the fallback must hand back an exact equal split
+    (and still sum to P)."""
+    for gains in ([1e-15, 1e-14, 1e-13],
+                  [0.0, 0.0, 0.0, 0.0],
+                  [1e-16] * 7):
+        g = jnp.asarray(gains)
+        p = np.asarray(ch.water_filling(g, 12.0))
+        np.testing.assert_allclose(p, 12.0 / len(gains), rtol=1e-4)
+        np.testing.assert_allclose(p.sum(), 12.0, rtol=1e-4)
+        assert (p >= 0).all()
+
+
+@settings(deadline=None, max_examples=30)
 @given(power=st.floats(0.1, 100.0), norm=st.floats(0.01, 1e4))
 def test_precoding_meets_power_constraint(power, norm):
     """eq. (5): E||x||² = P^t ||θ||² ≤ P_k."""

@@ -1,0 +1,217 @@
+"""Channel processes + scheduling invariants (repro.sim, DESIGN.md §Sim)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cwfl
+from repro.core.topology import TopologyConfig, make_topology
+from repro.sim.processes import (ChannelProcessConfig, channel_view,
+                                 csi_perturbation, init_channel, step_channel)
+from repro.sim.scheduling import (ScheduleConfig, init_schedule,
+                                  participation_mask)
+
+K = 10
+TCFG = TopologyConfig(num_clients=K, num_hotspots=2)
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return make_topology(jax.random.PRNGKey(0), TCFG)
+
+
+# ---------------------------------------------------------------------------
+# Channel processes.
+# ---------------------------------------------------------------------------
+
+def test_init_view_matches_topology(topo):
+    """Round-0 realization reproduces the seed topology exactly."""
+    st = init_channel(topo, TCFG, jax.random.PRNGKey(1))
+    view = channel_view(st, TCFG)
+    np.testing.assert_allclose(np.asarray(view.link_gain),
+                               np.asarray(topo.link_gain), rtol=1e-6)
+    assert bool(jnp.array_equal(view.adjacency, topo.adjacency))
+
+
+def test_static_limit_is_exact(topo):
+    """All knobs off ⇒ stepping never changes the channel (bit-for-bit)."""
+    cfg = ChannelProcessConfig()          # rho=1, no shadow, no motion
+    st = init_channel(topo, TCFG, jax.random.PRNGKey(1))
+    v0 = channel_view(st, TCFG)
+    for t in range(3):
+        st = step_channel(st, cfg, TCFG, jax.random.PRNGKey(10 + t))
+    v3 = channel_view(st, TCFG)
+    assert bool(jnp.array_equal(v0.link_gain, v3.link_gain))
+    assert bool(jnp.array_equal(v0.adjacency, v3.adjacency))
+
+
+def test_fading_variance_is_stationary(topo):
+    """Gauss-Markov update preserves E|h̃|² = 1 (unit Rayleigh power)."""
+    cfg = ChannelProcessConfig(fading_rho=0.7)
+    st = init_channel(topo, TCFG, jax.random.PRNGKey(1))
+    for t in range(60):
+        st = step_channel(st, cfg, TCFG, jax.random.PRNGKey(100 + t))
+    off = ~np.eye(K, dtype=bool)
+    power = float(np.mean(np.abs(np.asarray(st.h_tilde))[off] ** 2))
+    assert 0.6 < power < 1.5
+
+
+def test_fading_is_correlated_across_rounds(topo):
+    """ρ close to 1 ⇒ successive realizations stay close; ρ = 0 ⇒ fresh."""
+    st = init_channel(topo, TCFG, jax.random.PRNGKey(1))
+    key = jax.random.PRNGKey(2)
+    h0 = st.h_tilde
+    near = step_channel(st, ChannelProcessConfig(fading_rho=0.99), TCFG, key)
+    far = step_channel(st, ChannelProcessConfig(fading_rho=0.0), TCFG, key)
+    d_near = float(jnp.mean(jnp.abs(near.h_tilde - h0) ** 2))
+    d_far = float(jnp.mean(jnp.abs(far.h_tilde - h0) ** 2))
+    assert d_near < 0.1 < d_far
+
+
+def test_mobility_moves_and_rederives_graph(topo):
+    cfg = ChannelProcessConfig(speed=5.0)
+    st = init_channel(topo, TCFG, jax.random.PRNGKey(1))
+    p0 = st.positions
+    views = []
+    for t in range(20):
+        st = step_channel(st, cfg, TCFG, jax.random.PRNGKey(200 + t))
+        views.append(channel_view(st, TCFG))
+    assert float(jnp.max(jnp.abs(st.positions - p0))) > 1.0
+    # waypoints keep clients near the deployment area
+    assert float(jnp.max(st.positions)) < TCFG.area_size * 1.5
+    # per-round graphs stay valid: symmetric, no self-links
+    for v in views[-3:]:
+        adj = np.asarray(v.adjacency)
+        assert not adj.diagonal().any()
+        assert (adj == adj.T).all()
+        assert np.allclose(np.asarray(v.link_gain),
+                           np.asarray(v.link_gain).T.conj())
+
+
+def test_shadowing_changes_snr(topo):
+    cfg = ChannelProcessConfig(shadowing_std_db=6.0, shadowing_rho=0.5)
+    st = init_channel(topo, TCFG, jax.random.PRNGKey(1))
+    st = step_channel(st, cfg, TCFG, jax.random.PRNGKey(3))
+    v = channel_view(st, TCFG)
+    assert not bool(jnp.array_equal(v.link_snr, topo.link_snr))
+    sh = np.asarray(st.shadow_db)
+    assert np.allclose(sh, sh.T)
+
+
+def test_csi_perturbation_mean_one():
+    f = csi_perturbation(jax.random.PRNGKey(0), 4096, 0.3)
+    assert abs(float(f.mean()) - 1.0) < 0.05
+    assert float(f.min()) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Scheduling.
+# ---------------------------------------------------------------------------
+
+def test_trivial_schedule_flags():
+    assert ScheduleConfig().is_trivial
+    assert not ScheduleConfig(dropout_prob=0.1).is_trivial
+    assert not ScheduleConfig(num_stragglers=2, straggler_period=3).is_trivial
+    assert not ScheduleConfig(energy_budget=5).is_trivial
+    # stragglers without a period never fire
+    assert ScheduleConfig(num_stragglers=2).is_trivial
+
+
+def test_full_dropout_gives_empty_mask():
+    cfg = ScheduleConfig(dropout_prob=1.0)
+    st = init_schedule(cfg, K)
+    mask, st = participation_mask(cfg, st, jnp.asarray(0), jax.random.PRNGKey(0), K)
+    assert float(mask.sum()) == 0.0
+
+
+def test_stragglers_follow_the_period():
+    cfg = ScheduleConfig(num_stragglers=3, straggler_period=3)
+    st = init_schedule(cfg, K)
+    masks = []
+    for t in range(6):
+        m, st = participation_mask(cfg, st, jnp.asarray(t),
+                                   jax.random.PRNGKey(t), K)
+        masks.append(np.asarray(m))
+    for t, m in enumerate(masks):
+        expect_drop = (t % 3) == 2
+        assert (m[:3] == (0.0 if expect_drop else 1.0)).all()
+        assert (m[3:] == 1.0).all()
+
+
+def test_energy_budget_exhausts():
+    cfg = ScheduleConfig(energy_budget=2)
+    st = init_schedule(cfg, K)
+    sums = []
+    for t in range(4):
+        m, st = participation_mask(cfg, st, jnp.asarray(t),
+                                   jax.random.PRNGKey(t), K)
+        sums.append(float(m.sum()))
+    assert sums[:2] == [K, K] and sums[2:] == [0.0, 0.0]
+
+
+# ---------------------------------------------------------------------------
+# Mask-aware renormalization of the round coefficients.
+# ---------------------------------------------------------------------------
+
+def _cwfl_state(topo):
+    return cwfl.setup(topo, cwfl.CWFLConfig(num_clusters=3, snr_db=40.0),
+                      jax.random.PRNGKey(5))
+
+
+def test_masked_coefficients_renormalize(topo):
+    state = _cwfl_state(topo)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(6), (K, 32))}
+    mask = jnp.ones((K,)).at[jnp.asarray([1, 4])].set(0.0)
+    A, std1, B, kappa, m_back = cwfl.round_coefficients(
+        state, params, mask=mask)
+    A_np = np.asarray(A)
+    head_mask = np.asarray(state.plan.head_mask)
+    for k in (1, 4):
+        if head_mask[k] == 0:          # heads are forced present
+            assert np.allclose(A_np[:, k], 0.0)
+    np.testing.assert_allclose(A_np.sum(axis=1), 1.0, atol=1e-5)
+
+    # fewer participants ⇒ the renormalized receiver noise can only grow
+    _, std1_full, *_ = cwfl.round_coefficients(state, params, mask=None)
+    assert (np.asarray(std1) >= np.asarray(std1_full) - 1e-9).all()
+
+
+def test_all_ones_mask_is_bit_identical(topo):
+    """Satellite: the participation-mask path with an all-ones mask equals
+    the unmasked path bit-for-bit (CWFL and COTAF)."""
+    from repro.core import baselines as bl
+    state = _cwfl_state(topo)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(8), (K, 640)),
+              "b": jax.random.normal(jax.random.PRNGKey(9), (K, 7))}
+    key = jax.random.PRNGKey(10)
+    ones = jnp.ones((K,))
+    new_m, cons_m = cwfl.aggregate(params, state, key, mask=ones)
+    new_u, cons_u = cwfl.aggregate(params, state, key, mask=None)
+    for a, b in zip(jax.tree.leaves((new_m, cons_m)),
+                    jax.tree.leaves((new_u, cons_u))):
+        assert bool(jnp.array_equal(a, b))
+
+    cstate = bl.cotaf_setup(topo, jax.random.PRNGKey(11), snr_db=40.0)
+    for a, b in zip(
+            jax.tree.leaves(bl.cotaf_aggregate(params, cstate, key,
+                                               mask=ones)),
+            jax.tree.leaves(bl.cotaf_aggregate(params, cstate, key))):
+        assert bool(jnp.array_equal(a, b))
+
+
+def test_masked_aggregate_zeroes_absent_contribution(topo):
+    """An absent member's parameters must not influence the OTA sum: make
+    one non-head client's params huge; with it masked out the round output
+    matches the run where that client held ordinary values."""
+    state = _cwfl_state(topo)
+    absent = int(np.flatnonzero(np.asarray(state.plan.head_mask) == 0)[0])
+    key = jax.random.PRNGKey(12)
+    base = jax.random.normal(jax.random.PRNGKey(13), (K, 64))
+    huge = base.at[absent].set(1e6)
+    mask = jnp.ones((K,)).at[absent].set(0.0)
+    _, cons_huge = cwfl.aggregate({"w": huge}, state, key, mask=mask,
+                                  precode=False)
+    _, cons_base = cwfl.aggregate({"w": base}, state, key, mask=mask,
+                                  precode=False)
+    np.testing.assert_allclose(np.asarray(cons_huge["w"]),
+                               np.asarray(cons_base["w"]), atol=1e-5)
