@@ -8,11 +8,16 @@ scaled):
 * ``sim_loop``  — the pre-engine structure: one jitted round, Python loop,
   ``float(loss)`` host sync per round;
 * ``sim_mc``    — the Monte-Carlo grid (seeds × SNR sweep) compiled as ONE
-  jit, reporting aggregate rounds/sec throughput.
+  jit, reporting aggregate rounds/sec throughput;
+* ``sim_mc_vmap_S8`` / ``sim_mc_sharded_S8`` — the 8-trajectory A/B of
+  the single-device vmap sweep against the ``shard_map`` trajectory-
+  parallel sweep (`repro.sim.sharded`, ``mc`` mesh axis): steady-state
+  trajectory throughput, compile seconds, speedup, and a bitwise parity
+  bit (needs > 1 visible device; CI fakes 8 on CPU).
 
 ``benchmarks/run.py --only sim`` persists the rows to ``BENCH_sim.json``
-(rounds/sec, scan-vs-loop speedup, MC throughput) so the speed trajectory
-is machine-comparable across PRs.
+(rounds/sec, scan-vs-loop speedup, MC + sharded throughput) so the speed
+trajectory is machine-comparable across PRs.
 """
 from __future__ import annotations
 
@@ -47,9 +52,11 @@ def run(rounds: int = 8, mc_rounds: int = 3, seeds: int = 2,
     from repro.core import TopologyConfig, make_topology
     from repro.data import (SyntheticImageConfig, make_synthetic_images,
                             partition_iid)
+    from repro.launch.mesh import make_mc_mesh
     from repro.models import make_mnist_mlp, nll_loss
-    from repro.sim.engine import _SCAN_UNROLL, _build
+    from repro.sim.engine import _SCAN_UNROLL, _build, make_trajectory_fn
     from repro.sim.scenarios import Scenario
+    from repro.sim.sharded import make_sharded_sweep_fn
     from repro.training import FLConfig
 
     tcfg = TopologyConfig(num_clients=clients, num_hotspots=3)
@@ -113,12 +120,7 @@ def run(rounds: int = 8, mc_rounds: int = 3, seeds: int = 2,
                       eval_samples=test)
     mc_prepare, mc_make_body = _build(init, apply, loss, topo, xs, ys, xte,
                                       yte, mc_cfg, Scenario(), tcfg)
-
-    def traj(seed, snr_db):
-        ctx, c0, sx = mc_prepare(seed, snr_db)
-        _, (l, a) = jax.lax.scan(mc_make_body(ctx), c0, sx,
-                                 unroll=_SCAN_UNROLL)
-        return l, a
+    traj = make_trajectory_fn(mc_prepare, mc_make_body)
 
     mc_f = jax.jit(jax.vmap(jax.vmap(traj, in_axes=(None, 0)),
                             in_axes=(0, None)))
@@ -138,4 +140,54 @@ def run(rounds: int = 8, mc_rounds: int = 3, seeds: int = 2,
                  "compile_seconds": mc_compile_s,
                  "snr_grid": np.asarray(grid).tolist(),
                  "rounds": mc_rounds})
+
+    # --- sharded vs vmap: 8 trajectories across the device mesh -----------
+    # The acceptance A/B for `repro.sim.sharded`: same traced trajectory
+    # body, batched on one device (vmap) vs distributed over the ("mc",)
+    # mesh (shard_map).  Steady-state (post-compile) throughput; the
+    # seeds-only sweep is bitwise-identical between the two executors.
+    # The mc axis must divide the 8 trajectories or fit_spec would fall
+    # back to replication and the row would measure redundant unsharded
+    # work — cap the mesh to the largest dividing device count.
+    n_dev = next(n for n in (8, 4, 2, 1) if n <= len(jax.devices()))
+    if n_dev > 1:
+        seeds8 = jnp.arange(8)
+        vmap_f = jax.jit(jax.vmap(traj, in_axes=(0, None)))
+        t0 = time.perf_counter()
+        jax.block_until_ready(vmap_f(seeds8, 40.0))         # compile + run
+        vmap_compile_s = time.perf_counter() - t0
+        vmap_s = _median_time(
+            lambda: jax.block_until_ready(vmap_f(seeds8, 40.0)))
+
+        mesh = make_mc_mesh(n_dev)
+        shard_f = make_sharded_sweep_fn(traj, 8, mc_rounds, mesh,
+                                        snr_db=40.0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(shard_f(seeds8))              # compile + run
+        shard_compile_s = time.perf_counter() - t0
+        shard_s = _median_time(
+            lambda: jax.block_until_ready(shard_f(seeds8)))
+
+        bitwise = all(
+            bool(jnp.array_equal(a, b))
+            for a, b in zip(vmap_f(seeds8, 40.0), shard_f(seeds8)))
+        traj_speedup = vmap_s / shard_s
+        rows.append({"name": f"sim_mc_vmap_S8_K{clients}_T{mc_rounds}",
+                     "us": vmap_s * 1e6,
+                     "derived": f"traj_per_sec={8 / vmap_s:.2f}",
+                     "traj_per_sec": 8 / vmap_s,
+                     "compile_seconds": vmap_compile_s,
+                     "rounds": mc_rounds})
+        rows.append({"name": f"sim_mc_sharded_S8_D{n_dev}_K{clients}"
+                             f"_T{mc_rounds}",
+                     "us": shard_s * 1e6,
+                     "derived": f"traj_per_sec={8 / shard_s:.2f};"
+                                f"speedup_vs_vmap={traj_speedup:.2f}x;"
+                                f"bitwise={bitwise}",
+                     "traj_per_sec": 8 / shard_s,
+                     "speedup_vs_vmap": traj_speedup,
+                     "bitwise_equal_vs_vmap": bitwise,
+                     "devices": n_dev,
+                     "compile_seconds": shard_compile_s,
+                     "rounds": mc_rounds})
     return rows

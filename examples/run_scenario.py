@@ -2,11 +2,22 @@
 
     PYTHONPATH=src python examples/run_scenario.py --scenario mobile-fading --seeds 8
     PYTHONPATH=src python examples/run_scenario.py --scenario snr-sweep --seeds 4
+    PYTHONPATH=src python examples/run_scenario.py --seeds 8 --shard mc
+    PYTHONPATH=src python examples/run_scenario.py --shard clients
     PYTHONPATH=src python examples/run_scenario.py --list
 
 One seed runs a single scanned trajectory; ``--seeds N`` (N > 1) runs the
 whole N-seed (× SNR-grid, for sweep scenarios) Monte-Carlo batch as ONE
 jit via `repro.sim.run_monte_carlo` and reports mean ± std across seeds.
+
+``--shard mc`` distributes the flattened trajectory grid over the device
+mesh (`repro.sim.sharded`; pair with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU);
+``--shard clients`` splits the stacked K-client axis of a single
+trajectory instead.  ``--devices N`` caps the mesh; ``--assert-match-vmap``
+re-runs the single-device vmap sweep and asserts the sharded metrics
+match it (bitwise for seeds-only sweeps; ulp-level for SNR grids — see
+DESIGN.md §Sharded-MC).
 """
 from __future__ import annotations
 
@@ -35,6 +46,15 @@ def main() -> None:
     ap.add_argument("--train", type=int, default=4800)
     ap.add_argument("--test", type=int, default=1024)
     ap.add_argument("--out", default=None, help="optional JSON output path")
+    ap.add_argument("--shard", choices=["mc", "clients"], default=None,
+                    help="mc: shard the Monte-Carlo trajectory grid over "
+                         "the device mesh; clients: shard the stacked "
+                         "K-client axis of one trajectory")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="mesh size for --shard (0 = all visible devices)")
+    ap.add_argument("--assert-match-vmap", action="store_true",
+                    help="with --shard mc: also run the single-device vmap "
+                         "sweep and assert the metrics match")
     args = ap.parse_args()
 
     from repro.core import TopologyConfig, make_topology
@@ -63,14 +83,48 @@ def main() -> None:
                    num_clusters=args.clusters, snr_db=args.snr_db,
                    eval_samples=args.test)
 
+    is_sweep = args.seeds > 1 or bool(scenario.snr_grid)
+    if args.shard == "mc" and not is_sweep:
+        ap.error("--shard mc distributes a Monte-Carlo sweep; pass "
+                 "--seeds N > 1 or a grid scenario (e.g. snr-sweep), or "
+                 "use --shard clients for a single trajectory")
+    if args.assert_match_vmap and args.shard != "mc":
+        ap.error("--assert-match-vmap compares a --shard mc sweep "
+                 "against the vmap path; nothing to compare here")
+    mesh = None
+    if args.shard is not None:
+        from repro.launch.mesh import make_client_mesh, make_mc_mesh
+        make = make_mc_mesh if args.shard == "mc" else make_client_mesh
+        mesh = make(args.devices or None)
+        print(f"shard={args.shard} mesh={dict(mesh.shape)}")
+
     print(f"scenario={args.scenario} strategy={args.strategy} "
           f"K={args.clients} rounds={args.rounds} seeds={args.seeds}")
     t0 = time.perf_counter()
     if args.seeds > 1 or scenario.snr_grid:
+        if args.shard == "clients":
+            ap.error("--shard clients runs ONE trajectory (the K-client "
+                     "axis is the parallel axis); drop --seeds / pick a "
+                     "grid-free scenario, or use --shard mc for sweeps")
         h = run_monte_carlo(init, apply, loss, topo, xs, ys, xte, yte, cfg,
                             scenario=scenario, topo_cfg=tcfg,
-                            seeds=args.seeds)
+                            seeds=args.seeds, shard=args.shard, mesh=mesh)
         wall = time.perf_counter() - t0
+        if args.assert_match_vmap and args.shard == "mc":
+            h_ref = run_monte_carlo(init, apply, loss, topo, xs, ys, xte,
+                                    yte, cfg, scenario=scenario,
+                                    topo_cfg=tcfg, seeds=args.seeds)
+            for key in ("train_loss", "test_acc"):
+                a = np.asarray(h[key])
+                b = np.asarray(h_ref[key])
+                bit = bool(np.array_equal(a, b))
+                # SNR-grid sweeps batch nested on the vmap path and
+                # flattened on the sharded path: XLA's batching-dependent
+                # fusion costs ~1 ulp/round, compounding through SGD
+                # (DESIGN.md §Sharded-MC) — seeds-only sweeps are bitwise.
+                np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-5)
+                print(f"  sharded == vmap [{key}]: "
+                      f"{'bitwise' if bit else 'allclose(2e-5)'} OK")
         acc = np.asarray(h["test_acc"])            # (S, T) or (S, G, T)
         n_traj = int(np.prod(acc.shape[:-1]))
         if h["snr_grid"] is not None:
@@ -86,6 +140,7 @@ def main() -> None:
         payload = {
             "scenario": args.scenario,
             "strategy": args.strategy,
+            "shard": args.shard,
             "seeds": int(acc.shape[0]),
             "snr_grid": (None if h["snr_grid"] is None
                          else np.asarray(h["snr_grid"]).tolist()),
@@ -96,7 +151,8 @@ def main() -> None:
         }
     else:
         h = run_rounds(init, apply, loss, topo, xs, ys, xte, yte, cfg,
-                       scenario=scenario, topo_cfg=tcfg)
+                       scenario=scenario, topo_cfg=tcfg,
+                       shard=args.shard, mesh=mesh)
         wall = time.perf_counter() - t0
         acc = np.asarray(h["test_acc"])
         n_traj = 1
@@ -105,6 +161,7 @@ def main() -> None:
         payload = {
             "scenario": args.scenario,
             "strategy": args.strategy,
+            "shard": args.shard,
             "seeds": 1,
             "test_acc": acc.tolist(),
             "train_loss": np.asarray(h["train_loss"]).tolist(),

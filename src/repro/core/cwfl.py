@@ -246,7 +246,8 @@ def participation_weights(state: CWFLState,
 
 def round_coefficients(state: CWFLState, stacked_params=None,
                        normalize: bool = True, precode: bool = True,
-                       mask: Optional[jnp.ndarray] = None):
+                       mask: Optional[jnp.ndarray] = None,
+                       mean_sq: Optional[jnp.ndarray] = None):
     """The complete weight set of one sync round: phase-1 amplitudes Ã
     (precoded + renormalized), the effective phase-1 receiver noise std,
     the consensus mix B̃ with its equivalent noise std κ, and the phase-3
@@ -274,13 +275,18 @@ def round_coefficients(state: CWFLState, stacked_params=None,
 
     # eq. (5): clients whose per-symbol power E‖θ‖²/d exceeds 1 scale down
     # to meet E‖x‖² ≤ P_k (precode_scale — per channel use, DESIGN.md §1).
+    # ``mean_sq`` lets a caller that cannot see the whole stacked pytree
+    # (a client-sharded rank, `repro.sim.sharded`) supply the globally
+    # gathered (K,) per-channel-use power instead.
     if precode:
-        if stacked_params is None:
-            raise ValueError(
-                "precode=True needs stacked_params: the eq. (5) amplitude "
-                "clip is estimated from the transmitted signals' power")
-        A = A * precode_scale(state,
-                              per_client_mean_sq(stacked_params))[None, :]
+        if mean_sq is None:
+            if stacked_params is None:
+                raise ValueError(
+                    "precode=True needs stacked_params (or a precomputed "
+                    "mean_sq): the eq. (5) amplitude clip is estimated "
+                    "from the transmitted signals' power")
+            mean_sq = per_client_mean_sq(stacked_params)
+        A = A * precode_scale(state, mean_sq)[None, :]
 
     # Receiver scaling (eq. 8): AWGN std σ_c/sqrt(P); with normalization
     # both weights and noise are divided by the phase-1 row sums.
@@ -291,6 +297,31 @@ def round_coefficients(state: CWFLState, stacked_params=None,
         eff_std1 = eff_std1 / rows[:, 0]
     B, kappa = phase2_weights(state, normalize)
     return A, eff_std1, B, kappa, state.plan.membership.T
+
+
+def _flat_pack(leaves, rows: int) -> jnp.ndarray:
+    """K-stacked leaves -> one f32 ``(rows, d)`` matrix (leaf order)."""
+    return jnp.concatenate(
+        [x.reshape(rows, -1).astype(jnp.float32) for x in leaves], axis=1)
+
+
+def _flat_unpack(new_flat: jnp.ndarray, cons_flat: jnp.ndarray,
+                 leaves, treedef, rows: int):
+    """Inverse of :func:`_flat_pack` for the round's two outputs: slice
+    the ``(rows, d)`` / ``(d,)`` results back into per-leaf shapes and
+    dtypes.  Shared by the in-core fast path and the client-sharded sync
+    (`repro.sim.sharded`) so the leaf layout can never drift apart."""
+    new_leaves, cons_leaves, off = [], [], 0
+    for x in leaves:
+        n = int(np.prod(x.shape[1:]))
+        new_leaves.append(
+            new_flat[:, off:off + n].reshape((rows,) + x.shape[1:])
+            .astype(x.dtype))
+        cons_leaves.append(
+            cons_flat[off:off + n].reshape(x.shape[1:]).astype(x.dtype))
+        off += n
+    return (jax.tree.unflatten(treedef, new_leaves),
+            jax.tree.unflatten(treedef, cons_leaves))
 
 
 def _aggregate_flat(stacked_params, state: CWFLState, key: jax.Array,
@@ -308,24 +339,12 @@ def _aggregate_flat(stacked_params, state: CWFLState, key: jax.Array,
     A, eff_std1, B, kappa, m_back = round_coefficients(
         state, stacked_params, normalize, precode, mask)
 
-    flat = jnp.concatenate(
-        [x.reshape(K, -1).astype(jnp.float32) for x in leaves], axis=1)
+    flat = _flat_pack(leaves, K)
     n1 = _flat_leaf_noise(k1, leaves, C, eff_std1)
     n2 = _flat_leaf_noise(k2, leaves, C, kappa)
 
     new_flat, cons_flat = cwfl_round_auto(flat, A, n1, B, n2, m_back)
-
-    new_leaves, cons_leaves, off = [], [], 0
-    for x in leaves:
-        n = int(np.prod(x.shape[1:]))
-        new_leaves.append(
-            new_flat[:, off:off + n].reshape((K,) + x.shape[1:])
-            .astype(x.dtype))
-        cons_leaves.append(
-            cons_flat[off:off + n].reshape(x.shape[1:]).astype(x.dtype))
-        off += n
-    return (jax.tree.unflatten(treedef, new_leaves),
-            jax.tree.unflatten(treedef, cons_leaves))
+    return _flat_unpack(new_flat, cons_flat, leaves, treedef, K)
 
 
 def aggregate(stacked_params, state: CWFLState, key: jax.Array,

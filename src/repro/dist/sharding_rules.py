@@ -16,7 +16,10 @@ spec per parameter per mesh, every rule here is *fitted* to the mesh shape:
 ``param_specs`` / ``batch_specs`` / ``cache_specs`` apply these rules to
 every leaf of the model parameter / input-batch / decode-cache pytrees; the
 coverage across all assigned architectures is pinned by
-``tests/test_sharding_rules.py``.
+``tests/test_sharding_rules.py``.  ``trajectory_specs`` / ``client_specs``
+fit the scenario subsystem's meshes the same way — the Monte-Carlo
+trajectory axis (``mc``) and the stacked FL client axis (``clients``)
+of `repro.sim.sharded` (pinned by ``tests/test_sim_sharded.py``).
 """
 from __future__ import annotations
 
@@ -28,6 +31,8 @@ from jax.sharding import PartitionSpec as P
 # Axis aliases, resolved against the mesh at fit time.
 FSDP = "__fsdp__"     # fully-sharded parameter dim: ("pod", "data")
 BATCH = "__batch__"   # data-parallel batch dim:     ("pod", "data")
+MC = "__mc__"         # Monte-Carlo trajectory dim:  ("mc",)
+CLIENTS = "__clients__"  # stacked FL client dim:    ("clients",)
 
 _ALIAS_AXES = ("pod", "data")
 
@@ -42,6 +47,10 @@ def _axes_for(entry, mesh):
         return ()
     if entry in (FSDP, BATCH):
         cand = _ALIAS_AXES
+    elif entry == MC:
+        cand = ("mc",)
+    elif entry == CLIENTS:
+        cand = ("clients",)
     elif isinstance(entry, tuple):
         cand = entry
     else:
@@ -153,6 +162,26 @@ def cache_specs(cache_shapes, mesh):
             want = (None, BATCH) + (None,) * max(n - 2, 0)
         return fit_spec(s.shape, want[:n], mesh)
     return jax.tree.map(one, cache_shapes)
+
+
+def trajectory_specs(shapes, mesh):
+    """Monte-Carlo sweep leaves ``(N_traj, ...)``: the leading (flattened
+    seeds × SNR) trajectory dim over the ``mc`` axis, rest replicated.
+    `repro.sim.sharded` pads N_traj to the axis size before fitting, so
+    the divisibility rule never silently replicates a sweep."""
+    return jax.tree.map(
+        lambda s: fit_spec(s.shape, (MC,) + (None,) * (len(s.shape) - 1),
+                           mesh),
+        shapes)
+
+
+def client_specs(shapes, mesh):
+    """Stacked-client FL leaves ``(K, ...)``: the leading client dim over
+    the ``clients`` axis, rest replicated (one shard = K/n clients)."""
+    return jax.tree.map(
+        lambda s: fit_spec(s.shape,
+                           (CLIENTS,) + (None,) * (len(s.shape) - 1), mesh),
+        shapes)
 
 
 def named(specs, mesh):

@@ -38,6 +38,35 @@ def make_local_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def _make_1d_mesh(axis: str, num_devices=None):
+    n = len(jax.devices()) if num_devices is None else int(num_devices)
+    if n < 1 or n > len(jax.devices()):
+        raise ValueError(
+            f"requested {n} devices for axis {axis!r}, have "
+            f"{len(jax.devices())}")
+    if hasattr(jax.sharding, "AxisType"):  # jax >= 0.6 explicit-axes API
+        return jax.make_mesh((n,), (axis,),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    return jax.make_mesh((n,), (axis,))
+
+
+def make_mc_mesh(num_devices=None):
+    """Monte-Carlo trajectory mesh: 1-D, axis ``("mc",)``, over all devices
+    by default.  `repro.sim.sharded` shards the flattened seeds × SNR
+    trajectory grid along ``mc`` — the embarrassingly parallel axis of a
+    scenario sweep — with `repro.dist.sharding_rules.trajectory_specs`
+    fitting the leading trajectory dim to this mesh."""
+    return _make_1d_mesh("mc", num_devices)
+
+
+def make_client_mesh(num_devices=None):
+    """Client-parallel mesh: 1-D, axis ``("clients",)``.  Used by
+    `repro.sim.sharded.run_rounds_client_sharded` to split the stacked
+    K-client axis of one large-K trajectory across devices (K must divide
+    by the axis size; `sharding_rules.client_specs` fits the specs)."""
+    return _make_1d_mesh("clients", num_devices)
+
+
 def fsdp_axes(mesh) -> tuple:
     """The axes used for fully-sharded parameter dims (pod joins FSDP)."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -4,6 +4,9 @@ Layers a *dynamic* wireless world on top of the paper's stationary model
 (`repro.core.topology`): time-varying channel processes, per-round client
 scheduling, and a fully-scanned Monte-Carlo round engine that runs entire
 FL trajectories on device (vmap-able over seeds and scenario scalars).
+`repro.sim.sharded` distributes the same trajectories across the device
+mesh — the seeds × SNR grid over a ``("mc",)`` axis, or one large-K
+trajectory's client axis over ``("clients",)`` (DESIGN.md §Sharded-MC).
 """
 from repro.sim.processes import (ChannelProcessConfig, ChannelState,
                                  ChannelView, channel_view, csi_perturbation,
@@ -11,4 +14,6 @@ from repro.sim.processes import (ChannelProcessConfig, ChannelState,
 from repro.sim.scheduling import (ScheduleConfig, ScheduleState,
                                   init_schedule, participation_mask)
 from repro.sim.scenarios import SCENARIOS, Scenario, get_scenario
-from repro.sim.engine import run_monte_carlo, run_rounds
+from repro.sim.engine import make_trajectory_fn, run_monte_carlo, run_rounds
+from repro.sim.sharded import (monte_carlo_sharded,
+                               run_rounds_client_sharded)

@@ -65,6 +65,18 @@ _SIM_SALT = 0x51B
 _SCAN_UNROLL = 2
 
 
+def make_round_local_runner(loss_fn: Callable, cfg: FLConfig, n_k: int):
+    """The per-round local-training runner exactly as the engine builds
+    it: E epochs of minibatch SGD over a client's ``n_k`` examples.
+    Returns ``(optimizer, local_run)``; `repro.sim.sharded` reuses this
+    so the sharded trajectory can never drift from the engine's step
+    budget or optimizer construction."""
+    optimizer = sgd(cfg.lr)
+    steps_per_round = max(cfg.local_epochs * (n_k // cfg.batch_size), 1)
+    return optimizer, make_local_runner(loss_fn, optimizer, cfg.batch_size,
+                                        steps_per_round, cfg.mu_prox)
+
+
 def _tree_where(mask: jnp.ndarray, a, b):
     """Per-leaf ``where(mask_k, a_k, b_k)`` over K-stacked pytrees."""
     def pick(x, y):
@@ -98,10 +110,7 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
             "generated the topology (geometry statics: area, d0, ς, "
             "outage threshold)")
 
-    optimizer = sgd(cfg.lr)
-    steps_per_round = max(cfg.local_epochs * (n_k // cfg.batch_size), 1)
-    local_run = make_local_runner(loss_fn, optimizer, cfg.batch_size,
-                                  steps_per_round, cfg.mu_prox)
+    optimizer, local_run = make_round_local_runner(loss_fn, cfg, n_k)
     x_ev = x_test[: cfg.eval_samples]
     y_ev = y_test[: cfg.eval_samples]
 
@@ -253,13 +262,30 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
     return prepare, make_body
 
 
+def make_trajectory_fn(prepare: Callable, make_body: Callable) -> Callable:
+    """The per-trajectory closure: ``traj(seed, snr_db) -> (loss, acc)``,
+    both ``(T,)``.  This is the ONE traced body every Monte-Carlo executor
+    consumes — `run_monte_carlo`'s single-device ``vmap`` grid and the
+    device-parallel ``shard_map`` grid in :mod:`repro.sim.sharded` batch
+    the same function, so the two paths can only differ by how XLA
+    batches it (see the parity notes in DESIGN.md §Sharded-MC)."""
+    def traj(seed, snr_db):
+        ctx, carry0, scan_xs = prepare(seed, snr_db)
+        _, (loss, acc) = jax.lax.scan(make_body(ctx), carry0, scan_xs,
+                                      unroll=_SCAN_UNROLL)
+        return loss, acc
+    return traj
+
+
 def run_rounds(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
                topology: Topology, xs: jnp.ndarray, ys: jnp.ndarray,
                x_test: jnp.ndarray, y_test: jnp.ndarray, cfg: FLConfig,
                scenario: Optional[Scenario] = None,
                topo_cfg: Optional[TopologyConfig] = None,
                mode: str = "scan",
-               progress: Optional[Callable] = None) -> dict[str, Any]:
+               progress: Optional[Callable] = None,
+               shard: Optional[str] = None,
+               mesh=None) -> dict[str, Any]:
     """Run one FL trajectory; returns history with on-device arrays.
 
     ``mode="scan"`` (default): the whole trajectory is one jit — no
@@ -267,8 +293,27 @@ def run_rounds(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
     ``mode="loop"``: the legacy per-round-jit host loop (bit-identical
     history; supports a live per-round ``progress(r, loss, acc)``
     callback, and is the baseline the scan speedup is measured against).
+    ``shard="clients"``: distribute the stacked K-client axis over a
+    ``("clients",)`` mesh (`repro.sim.sharded.run_rounds_client_sharded`
+    — local training per rank, the per-cluster OTA sums riding a mesh
+    collective); static CWFL scenarios only.
     """
     scenario = scenario or Scenario()
+    if shard is not None:
+        if shard != "clients":
+            raise ValueError(
+                f"run_rounds shards the client axis only (shard='clients'); "
+                f"got {shard!r} — trajectory sharding (shard='mc') lives in "
+                "run_monte_carlo")
+        if mode != "scan" or progress is not None:
+            raise ValueError(
+                "shard='clients' runs the scanned trajectory only — "
+                "mode='loop' / live progress callbacks are not supported "
+                "on the sharded path")
+        from repro.sim import sharded
+        return sharded.run_rounds_client_sharded(
+            init_fn, apply_fn, loss_fn, topology, xs, ys, x_test, y_test,
+            cfg, scenario=scenario, mesh=mesh)
     prepare, make_body = _build(init_fn, apply_fn, loss_fn, topology, xs, ys,
                                 x_test, y_test, cfg, scenario, topo_cfg)
     T = cfg.rounds
@@ -316,13 +361,19 @@ def run_monte_carlo(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
                     scenario: Optional[Scenario] = None,
                     topo_cfg: Optional[TopologyConfig] = None,
                     seeds: int = 8,
-                    snr_grid=None) -> dict[str, Any]:
+                    snr_grid=None,
+                    shard: Optional[str] = None,
+                    mesh=None) -> dict[str, Any]:
     """Monte-Carlo grid: ``seeds`` × ``snr_grid`` full trajectories in ONE
     jit (vmap over the seed axis, vmap over the scenario-scalar axis,
     `lax.scan` over rounds inside).
 
     ``snr_grid`` defaults to ``scenario.snr_grid`` when the scenario
     defines one (e.g. ``snr-sweep``); ``None``/empty sweeps only seeds.
+    ``shard="mc"`` distributes the flattened seeds × SNR trajectory grid
+    over the device mesh via ``shard_map`` (`repro.sim.sharded`) instead
+    of batching it all onto one device; the metrics are identical (see
+    the parity contract pinned by ``tests/test_sim_sharded.py``).
     Returns ``train_loss``/``test_acc`` of shape (S, T) or (S, G, T).
     """
     scenario = scenario or Scenario()
@@ -330,15 +381,19 @@ def run_monte_carlo(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
         snr_grid = scenario.snr_grid
     prepare, make_body = _build(init_fn, apply_fn, loss_fn, topology, xs, ys,
                                 x_test, y_test, cfg, scenario, topo_cfg)
-
-    def traj(seed, snr_db):
-        ctx, carry0, scan_xs = prepare(seed, snr_db)
-        _, (loss, acc) = jax.lax.scan(make_body(ctx), carry0, scan_xs,
-                                      unroll=_SCAN_UNROLL)
-        return loss, acc
+    traj = make_trajectory_fn(prepare, make_body)
 
     seed_arr = jnp.asarray(cfg.seed + np.arange(seeds))
-    if snr_grid is None:
+    if shard is not None:
+        if shard != "mc":
+            raise ValueError(
+                f"run_monte_carlo shards the trajectory grid only "
+                f"(shard='mc'); got {shard!r} — client-axis sharding "
+                "(shard='clients') lives in run_rounds")
+        from repro.sim import sharded
+        loss, acc, grid = sharded.monte_carlo_sharded(
+            traj, seed_arr, snr_grid, cfg.snr_db, cfg.rounds, mesh=mesh)
+    elif snr_grid is None:
         loss, acc = jax.jit(jax.vmap(traj, in_axes=(0, None)))(
             seed_arr, cfg.snr_db)
         grid = None

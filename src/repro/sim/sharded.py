@@ -1,0 +1,295 @@
+"""Device-parallel execution of the scenario engine (DESIGN.md §Sharded-MC).
+
+`repro.sim.engine.run_monte_carlo` batches the whole seeds × SNR grid onto
+ONE device with ``vmap``; this module distributes the same traced
+trajectory body (`engine.make_trajectory_fn` — shared, not re-derived)
+across the mesh:
+
+* ``monte_carlo_sharded`` — the trajectory grid is flattened seed-major,
+  padded up to the ``("mc",)`` mesh axis size, and run under
+  ``shard_map``: each device vmaps its own chunk of trajectories with
+  per-trajectory metric buffers staying on that device until the single
+  gather implied by the ``P("mc")`` out-spec.  Trajectories are
+  embarrassingly parallel, so the body contains no collective at all —
+  the sharded sweep computes exactly what the single-device vmap sweep
+  computes (parity is pinned bitwise by ``tests/test_sim_sharded.py``;
+  see DESIGN.md §Sharded-MC for why batch-size-dependent XLA fusion is
+  the only thing that could ever split them).
+
+* ``run_rounds_client_sharded`` — within ONE large-K trajectory, the
+  stacked client axis is split over a ``("clients",)`` mesh
+  (`repro.dist.sharding_rules.client_specs`): each rank trains its K/n
+  clients locally and the CWFL sync runs as a two-phase collective in the
+  mold of `repro.dist.fl_integration.hierarchical_ota_allreduce` — the
+  per-cluster OTA sums ride a masked ``psum`` over the client axis
+  (phase 1), the tiny inter-head consensus mix stays rank-local
+  (phase 2), and each rank applies only its own rows of the phase-3
+  downlink.  Channel-noise keys are replicated, so every rank sees the
+  same channel realization, exactly like the hierarchical collective.
+  Parity with the unsharded engine is *ulp-level*, not bitwise: the
+  ``psum`` re-associates the over-the-air superposition Σ_k Ã_ck θ_k
+  (and the gathered precoding norms) across ranks — documented in
+  DESIGN.md §Sharded-MC and pinned with tolerances in the tests.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import cwfl
+from repro.dist import shard_map
+from repro.dist.sharding_rules import client_specs, trajectory_specs
+from repro.launch.mesh import make_client_mesh, make_mc_mesh
+from repro.models.small import accuracy as _accuracy
+from repro.sim.engine import _SCAN_UNROLL, make_round_local_runner
+from repro.sim.scenarios import Scenario
+from repro.training.federated import FLConfig
+
+
+# ---------------------------------------------------------------------------
+# Trajectory-parallel Monte-Carlo (shard="mc").
+# ---------------------------------------------------------------------------
+
+def _pad_to(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Pad the leading axis up to ``n`` by repeating the last entry (the
+    padded trajectories are real but redundant work, sliced off after the
+    gather — a uniform per-device workload beats a ragged one)."""
+    short = n - x.shape[0]
+    if short <= 0:
+        return x
+    return jnp.concatenate([x, jnp.broadcast_to(x[-1], (short,) + x.shape[1:])])
+
+
+def make_sharded_sweep_fn(traj, n_pad: int, rounds: int, mesh,
+                          snr_db=None, with_grid: bool = False):
+    """Build the jitted ``shard_map`` sweep over ``n_pad`` flattened
+    trajectories (``n_pad`` must divide over the ``mc`` axis).
+
+    Returns ``f(seed_flat[, snr_flat]) -> (loss, acc)`` of shape
+    ``(n_pad, rounds)`` each.  Build ONCE and reuse — every call to this
+    factory traces and compiles afresh (the bench measures steady-state
+    throughput on the returned callable).
+    """
+    in_spec = trajectory_specs(
+        jax.ShapeDtypeStruct((n_pad,), jnp.int32), mesh)
+    out_spec = trajectory_specs(
+        jax.ShapeDtypeStruct((n_pad, rounds), jnp.float32), mesh)
+
+    # check_rep=False: the body is collective-free (rep checking has
+    # nothing to verify) and the fused CWFL pallas_call has no
+    # replication rule.
+    if with_grid:
+        body = lambda s, g: jax.vmap(traj)(s, g)
+        return jax.jit(shard_map(
+            body, mesh=mesh, in_specs=(in_spec, in_spec),
+            out_specs=(out_spec, out_spec), check_rep=False))
+    # snr_db may be a plain float or None — keep it a closure constant
+    # exactly like the vmap path's in_axes=(0, None).
+    body = lambda s: jax.vmap(lambda z: traj(z, snr_db))(s)
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(in_spec,),
+        out_specs=(out_spec, out_spec), check_rep=False))
+
+
+def monte_carlo_sharded(traj, seeds: jnp.ndarray, snr_grid, snr_db,
+                        rounds: int, mesh=None):
+    """Run the flattened seeds × SNR grid under ``shard_map`` on the ``mc``
+    mesh axis.
+
+    ``traj`` is the engine's shared per-trajectory closure
+    (`engine.make_trajectory_fn`).  Returns ``(loss, acc, grid)`` with the
+    same shapes/dtypes as the vmap path: (S, T) when ``snr_grid`` is
+    empty, else (S, G, T) in seed-major grid order.
+    """
+    if mesh is None:
+        mesh = make_mc_mesh()
+    if "mc" not in mesh.axis_names:
+        raise ValueError(
+            f"shard='mc' needs a mesh with an ('mc',) axis "
+            f"(launch.mesh.make_mc_mesh); got axes {mesh.axis_names}")
+    n_dev = dict(mesh.shape)["mc"]
+    S = int(seeds.shape[0])
+
+    if snr_grid is not None and len(snr_grid) > 0:
+        grid = jnp.asarray(snr_grid, jnp.float32)
+        G = int(grid.shape[0])
+        # seed-major flattening: pair i = (seed[i // G], grid[i % G]) — the
+        # same order vmap(seeds) ∘ vmap(grid) fills (S, G), so the reshape
+        # below is a pure relabeling.
+        seed_flat = jnp.repeat(seeds, G)
+        snr_flat = jnp.tile(grid, S)
+    else:
+        grid, G = None, 0
+        seed_flat = seeds
+        snr_flat = None
+
+    n = int(seed_flat.shape[0])
+    n_pad = -(-n // n_dev) * n_dev
+    seed_flat = _pad_to(seed_flat, n_pad)
+
+    f = make_sharded_sweep_fn(traj, n_pad, rounds, mesh, snr_db=snr_db,
+                              with_grid=snr_flat is not None)
+    if snr_flat is None:
+        loss, acc = f(seed_flat)
+    else:
+        loss, acc = f(seed_flat, _pad_to(snr_flat, n_pad))
+
+    loss, acc = loss[:n], acc[:n]
+    if grid is not None:
+        loss = loss.reshape(S, G, rounds)
+        acc = acc.reshape(S, G, rounds)
+    return loss, acc, grid
+
+
+# ---------------------------------------------------------------------------
+# Client-parallel single trajectory (shard="clients").
+# ---------------------------------------------------------------------------
+
+def _client_sharded_sync(stacked_local, state, key: jax.Array, axis: str):
+    """One CWFL sync with the K clients split over ``axis``.
+
+    The K'-clients-per-rank generalization of
+    `repro.dist.fl_integration.hierarchical_ota_allreduce`: phase 1's
+    per-cluster OTA sums ride ``psum`` (the superposition over clients IS
+    the collective), phase 2's (C, C) consensus mix is rank-local, and
+    phase 3 applies only this rank's rows of the downlink matrix.  Noise
+    streams replicate `cwfl._aggregate_flat`'s per-leaf key schedule with
+    shared keys, so every rank sees the identical channel realization and
+    the only divergence from the unsharded flat path is the ``psum``'s
+    cross-rank re-association (ulp-level; DESIGN.md §Sharded-MC).
+    """
+    leaves, treedef = jax.tree.flatten(stacked_local)
+    kl = leaves[0].shape[0]
+    C = state.num_clusters
+    k1, k2 = jax.random.split(key)
+
+    flat = cwfl._flat_pack(leaves, kl)
+    d = flat.shape[1]
+
+    # eq. (5) precoding needs every client's per-channel-use power: gather
+    # the (K',) local norms into the global (K,) vector on every rank.
+    sq_local = jnp.sum(flat * flat, axis=1)
+    mean_sq = jax.lax.all_gather(sq_local, axis, tiled=True) / d
+    A, eff_std1, B, kappa, m_back = cwfl.round_coefficients(
+        state, None, mean_sq=mean_sq)
+
+    r = jax.lax.axis_index(axis)
+    a_loc = jax.lax.dynamic_slice_in_dim(A, r * kl, kl, axis=1)   # (C, K')
+
+    # Phase 1 (eq. 8): the OTA MAC — per-cluster sums over all K clients
+    # ride the mesh collective; receiver AWGN is shared-key replicated.
+    theta_tilde = jax.lax.psum(a_loc @ flat, axis)                # (C, d)
+    theta_tilde = theta_tilde + cwfl._flat_leaf_noise(
+        k1, leaves, C, eff_std1)
+
+    # Phase 2 (eq. 9 / lemma 2): tiny (C, C) mix, rank-local.
+    theta_bar = B @ theta_tilde + cwfl._flat_leaf_noise(k2, leaves, C, kappa)
+
+    # Phase 3: error-free downlink — this rank's clients only.
+    m_loc = jax.lax.dynamic_slice_in_dim(m_back, r * kl, kl, axis=0)
+    new_flat = m_loc @ theta_bar                                  # (K', d)
+    cons_flat = jnp.mean(theta_bar, axis=0)                       # (d,)
+    return cwfl._flat_unpack(new_flat, cons_flat, leaves, treedef, kl)
+
+
+def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
+                              xs: jnp.ndarray, ys: jnp.ndarray,
+                              x_test: jnp.ndarray, y_test: jnp.ndarray,
+                              cfg: FLConfig,
+                              scenario: Optional[Scenario] = None,
+                              mesh=None) -> dict[str, Any]:
+    """One trajectory with the stacked K-client axis sharded over a
+    ``("clients",)`` mesh: per-rank local training (vmap over K/n local
+    clients) + the `psum`-riding CWFL sync, scanned over rounds.
+
+    Static CWFL scenarios only — the per-round state rebuilds of dynamic
+    scenarios replicate fine, but masking/re-clustering haven't been
+    taught the sharded sync yet (raise rather than silently diverge).
+    The carry and key schedule come from `engine._build`'s own eager
+    ``prepare`` (not a copy), so they track the unsharded path by
+    construction; metrics agree to psum-reassociation tolerance.
+    """
+    from repro.sim.engine import _build
+
+    scenario = scenario or Scenario()
+    if not scenario.is_static:
+        raise NotImplementedError(
+            "shard='clients' supports static scenarios only (dynamic "
+            "masking/re-clustering haven't been taught the sharded sync)")
+    if cfg.strategy != "cwfl":
+        raise NotImplementedError(
+            f"shard='clients' implements the CWFL sync collective only; "
+            f"got strategy {cfg.strategy!r}")
+    if mesh is None:
+        mesh = make_client_mesh()
+    if "clients" not in mesh.axis_names:
+        raise ValueError(
+            f"shard='clients' needs a mesh with a ('clients',) axis "
+            f"(launch.mesh.make_client_mesh); got axes {mesh.axis_names}")
+    n_dev = dict(mesh.shape)["clients"]
+    K, n_k = int(xs.shape[0]), int(xs.shape[1])
+    if K % n_dev:
+        raise ValueError(
+            f"K={K} clients must divide over the {n_dev}-way clients axis")
+    kl = K // n_dev
+    T = cfg.rounds
+
+    # EAGER prepare — the engine's own (bit-identity-protected) setup and
+    # PRNG schedule; a static scenario's ctx IS the strategy state.
+    prepare, _ = _build(init_fn, apply_fn, loss_fn, topology, xs, ys,
+                        x_test, y_test, cfg, scenario, None)
+    state0, carry0, scan_xs = prepare(cfg.seed, cfg.snr_db)
+    stacked, opt_state = carry0["stacked"], carry0["opt"]
+    params0 = carry0["consensus"]
+    round_keys = scan_xs["rkey"]
+
+    _, local_run = make_round_local_runner(loss_fn, cfg, n_k)
+    x_ev = x_test[: cfg.eval_samples]
+    y_ev = y_test[: cfg.eval_samples]
+
+    def traj(stacked0, opt0, cons0, xs_l, ys_l, rkeys):
+        r = jax.lax.axis_index("clients")
+
+        def body(carry, rkey):
+            st, opt, _ = carry
+            k_local, k_agg = jax.random.split(rkey)
+            client_keys = jax.random.split(k_local, K)   # global schedule
+            ck = jax.lax.dynamic_slice_in_dim(client_keys, r * kl, kl)
+            st, opt, losses = jax.vmap(local_run)(st, opt, xs_l, ys_l, ck)
+            new, consensus = _client_sharded_sync(st, state0, k_agg,
+                                                  "clients")
+            loss = jax.lax.psum(jnp.sum(losses), "clients") / K
+            logits = apply_fn(consensus, x_ev)
+            acc = _accuracy(logits, y_ev)
+            return (new, opt, consensus), (loss, acc)
+
+        (_, _, final), (loss, acc) = jax.lax.scan(
+            body, (stacked0, opt0, cons0), rkeys, unroll=_SCAN_UNROLL)
+        return loss, acc, final
+
+    # Specs come from the dist rules layer: leading K over "clients" for
+    # every stacked leaf, replication for everything per-rank identical.
+    k_spec = lambda tree: client_specs(jax.eval_shape(lambda t: t, tree),
+                                       mesh)
+    rep = lambda tree: jax.tree.map(lambda _: P(), tree)
+    f = shard_map(
+        traj, mesh=mesh,
+        in_specs=(k_spec(stacked), k_spec(opt_state), rep(params0),
+                  P("clients"), P("clients"), P()),
+        out_specs=(P(), P(), rep(params0)),
+        check_rep=False)   # scan+psum bodies defeat the rep checker
+    loss, acc, consensus = jax.jit(f)(stacked, opt_state, params0, xs, ys,
+                                      round_keys)
+
+    return {
+        "round": np.arange(1, T + 1),
+        "train_loss": loss,
+        "test_acc": acc,
+        "final_params": consensus,
+        "avg_acc": jnp.mean(acc),
+        "final_acc": acc[-1],
+    }

@@ -26,8 +26,14 @@ def _round_inputs(K, C, d, seed=0, dtype=jnp.float32, noisy=True):
     return s, a, n1, b, n2, m
 
 
-@pytest.mark.parametrize("K,C,d", [(8, 2, 512), (50, 3, 4096), (27, 4, 1000),
-                                   (12, 3, 257)])
+# Interpret-mode Pallas runs its grid as a Python loop (~1000x the jnp
+# ref per BENCH_kernels.json), so the big shapes ride the slow lane —
+# the small cases keep full path coverage (multi-tile, ragged) tier-1.
+@pytest.mark.parametrize("K,C,d", [
+    (8, 2, 512), (12, 3, 257),
+    pytest.param(50, 3, 4096, marks=pytest.mark.slow),
+    pytest.param(27, 4, 1000, marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_ota_aggregate_matches_ref(K, C, d, dtype):
     key = jax.random.PRNGKey(0)
@@ -41,8 +47,10 @@ def test_ota_aggregate_matches_ref(K, C, d, dtype):
                                np.asarray(r, np.float32), atol=tol, rtol=tol)
 
 
-@pytest.mark.parametrize("K,C,d,tile", [(8, 3, 1337, 256), (5, 2, 700, 512),
-                                        (16, 4, 2049, 2048)])
+@pytest.mark.parametrize("K,C,d,tile", [
+    (8, 3, 1337, 256), (5, 2, 700, 512),
+    pytest.param(16, 4, 2049, 2048, marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_ota_aggregate_ragged_last_tile(K, C, d, tile, dtype):
     """Interpret-mode parity at non-tile-aligned d: the internally padded
@@ -89,8 +97,10 @@ def test_ota_aggregate_linearity():
 # Fused single-pass CWFL round kernel.
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("K,C,d,tile", [(8, 2, 2048, 512), (50, 3, 4096, 2048),
-                                        (12, 3, 1337, 512), (5, 2, 700, 256)])
+@pytest.mark.parametrize("K,C,d,tile", [
+    (8, 2, 2048, 512), (12, 3, 1337, 512), (5, 2, 700, 256),
+    pytest.param(50, 3, 4096, 2048, marks=pytest.mark.slow),
+])
 def test_cwfl_round_noiseless_bitexact(K, C, d, tile):
     """Noiseless f32: the fused kernel matches the three-pass reference
     bit-for-bit, on tile-aligned and ragged d alike."""
@@ -102,8 +112,11 @@ def test_cwfl_round_noiseless_bitexact(K, C, d, tile):
     np.testing.assert_array_equal(np.asarray(cons), np.asarray(rcons))
 
 
-@pytest.mark.parametrize("K,C,d,tile", [(8, 3, 2048, 512), (27, 4, 1000, 256),
-                                        (16, 4, 2049, 2048)])
+@pytest.mark.parametrize("K,C,d,tile", [
+    (8, 3, 2048, 512),
+    pytest.param(27, 4, 1000, 256, marks=pytest.mark.slow),
+    pytest.param(16, 4, 2049, 2048, marks=pytest.mark.slow),
+])
 def test_cwfl_round_injected_noise_bitexact(K, C, d, tile):
     """Fixed injected noise (both phases): still bit-for-bit vs the
     reference — the noise adds are inside the same fused pass."""
@@ -174,8 +187,11 @@ def test_cwfl_round_auto_routes_by_dim(monkeypatch):
     assert kernel_dims == [4096]   # small d stayed on the jnp reference
 
 
-@pytest.mark.parametrize("B,H,KV,S,D", [(2, 4, 2, 256, 64), (1, 2, 1, 100, 32),
-                                        (1, 8, 8, 130, 128), (2, 6, 2, 64, 64)])
+@pytest.mark.parametrize("B,H,KV,S,D", [
+    (1, 2, 1, 100, 32), (2, 6, 2, 64, 64),
+    pytest.param(2, 4, 2, 256, 64, marks=pytest.mark.slow),
+    pytest.param(1, 8, 8, 130, 128, marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_flash_attention_matches_ref(B, H, KV, S, D, dtype):
     key = jax.random.PRNGKey(0)

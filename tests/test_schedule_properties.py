@@ -1,0 +1,116 @@
+"""Property tests for the mask-aware renormalization (DESIGN.md §Sim).
+
+Runs under real hypothesis when installed, else under the deterministic
+fallback registered by ``tests/conftest.py`` (seeded random sampling,
+same ``given``/``settings`` surface).
+
+Invariants, over random masks / topologies:
+
+* the masked, renormalized phase-1 rows re-sum to the unmasked total
+  (1.0 in convex-combination mode) over the surviving clients only;
+* receivers are forced present under EVERY mask: CWFL cluster-heads
+  (`cwfl.participation_weights`) and the COTAF server
+  (`baselines.cotaf_participation`);
+* an all-masked round is a no-op at the engine level: no client
+  transmits, the consensus (and the reported accuracy) stays frozen.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import TopologyConfig, baselines, cwfl, make_topology
+
+K = 10
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return make_topology(jax.random.PRNGKey(3),
+                         TopologyConfig(num_clients=K, num_hotspots=3))
+
+
+@pytest.fixture(scope="module")
+def state(topo):
+    return cwfl.setup(topo, cwfl.CWFLConfig(num_clusters=3, snr_db=40.0),
+                      jax.random.PRNGKey(5))
+
+
+def _mask_from_bits(bits):
+    m = np.zeros((K,), np.float32)
+    m[: len(bits)] = np.asarray(bits[:K], np.float32)
+    return jnp.asarray(m)
+
+
+@settings(max_examples=12, deadline=None)
+@given(bits=st.lists(st.booleans(), min_size=K, max_size=K))
+def test_masked_rows_resum_to_unmasked_total(state, bits):
+    """Ã's convex renormalization must hold for the *surviving* clients:
+    every masked row re-sums to exactly the unmasked total (1.0), and
+    absent non-head columns are exactly zero (they transmit no power)."""
+    mask = _mask_from_bits(bits)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(11), (K, 24))}
+    A, std1, *_ = cwfl.round_coefficients(state, params, mask=mask)
+    A = np.asarray(A)
+    A_full, std1_full, *_ = cwfl.round_coefficients(state, params, mask=None)
+    np.testing.assert_allclose(A.sum(axis=1),
+                               np.asarray(A_full).sum(axis=1), atol=1e-5)
+    head = np.asarray(state.plan.head_mask) > 0
+    absent = (np.asarray(mask) == 0) & ~head
+    assert np.all(A[:, absent] == 0.0)
+    # losing row mass can only RAISE the renormalized receiver noise
+    assert np.all(np.asarray(std1) >= np.asarray(std1_full) - 1e-9)
+
+
+@settings(max_examples=12, deadline=None)
+@given(bits=st.lists(st.booleans(), min_size=K, max_size=K))
+def test_receivers_forced_present_under_every_mask(state, topo, bits):
+    mask = _mask_from_bits(bits)
+    part = cwfl.participation_weights(state, mask)
+    head = np.asarray(state.plan.head_mask) > 0
+    assert np.all(np.asarray(part)[head] == 1.0)
+    # members keep exactly their mask bit
+    np.testing.assert_array_equal(np.asarray(part)[~head],
+                                  np.asarray(mask)[~head])
+
+    cstate = baselines.cotaf_setup(topo, jax.random.PRNGKey(6), snr_db=40.0)
+    cpart = baselines.cotaf_participation(cstate, mask)
+    assert float(np.asarray(cpart)[int(cstate.server)]) == 1.0
+
+
+@settings(max_examples=4, deadline=None)
+@given(k=st.integers(min_value=4, max_value=9),
+       seed=st.integers(min_value=0, max_value=2 ** 16))
+def test_all_masked_round_is_noop(k, seed):
+    """Every client straggling ⇒ the sync is skipped: consensus (and the
+    accuracy computed from it) is frozen at init while local training
+    still moves the per-client losses.  Randomized over K and data
+    seeds; tiny workload so the property stays tier-1-fast."""
+    from repro.data import (SyntheticImageConfig, make_synthetic_images,
+                            partition_iid)
+    from repro.models import make_mnist_mlp, nll_loss
+    from repro.sim import Scenario, ScheduleConfig, run_rounds
+    from repro.training import FLConfig
+
+    key = jax.random.PRNGKey(seed)
+    dcfg = SyntheticImageConfig.mnist_like(num_train=32 * k, num_test=64)
+    (xtr, ytr), (xte, yte) = make_synthetic_images(key, dcfg)
+    topo = make_topology(jax.random.fold_in(key, 1),
+                         TopologyConfig(num_clients=k, num_hotspots=2))
+    xs, ys = partition_iid(jax.random.fold_in(key, 2), xtr, ytr, k)
+    init, apply = make_mnist_mlp(hidden=(8,))
+    loss = lambda p, x, y: nll_loss(apply(p, x), y)
+    cfg = FLConfig(strategy="cwfl", rounds=2, snr_db=40.0, batch_size=16,
+                   num_clusters=2, eval_samples=64, seed=seed % 97)
+    sc = Scenario(name="blackout",
+                  schedule=ScheduleConfig(num_stragglers=k,
+                                          straggler_period=1))
+    h = run_rounds(init, apply, loss, topo, xs, ys, xte, yte, cfg,
+                   scenario=sc)
+    acc = np.asarray(h["test_acc"])
+    assert np.isfinite(np.asarray(h["train_loss"])).all()
+    assert (acc == acc[0]).all()                  # consensus never updated
+    loss_arr = np.asarray(h["train_loss"])
+    assert not (loss_arr == loss_arr[0]).all()    # local training progressed
