@@ -82,6 +82,37 @@ def main() -> None:
         payload = {
             r["name"]: {k: v for k, v in r.items() if k != "name"}
             for r in srows}
+        # Throughput trail: before overwriting, record this run's
+        # steady-state rates relative to the previously committed
+        # BENCH_sim.json.  Informational — the prior file came from a
+        # different session of a noisy shared box (same-binary re-runs
+        # swing +-30-50% here), so regressions should be judged from a
+        # same-session A/B (see the registry_indirection_guard entry for
+        # the Strategy-API PR's methodology), not from these ratios.
+        try:
+            with open(args.sim_out) as f:
+                prev = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            prev = {}
+        guarded = {"sim_scan": "rounds_per_sec", "sim_mc_vmap": "traj_per_sec",
+                   "sim_mc_sharded": "traj_per_sec", "sim_mc_S": "mc_rounds_per_sec"}
+        ratios = {}
+        for name, row in payload.items():
+            metric = next((m for pfx, m in guarded.items()
+                           if name.startswith(pfx) and m in row), None)
+            if metric and metric in prev.get(name, {}):
+                ratios[f"{name}:{metric}"] = round(
+                    row[metric] / prev[name][metric], 3)
+        if ratios:
+            payload["throughput_vs_previous_file"] = {
+                "ratios": ratios,
+                "min_ratio": min(ratios.values()),
+                "note": "cross-session comparison on a shared box; "
+                        "informational only",
+            }
+        for k, v in prev.items():
+            if k.endswith("_guard") and k not in payload:
+                payload[k] = v      # persist one-off guard records
         with open(args.sim_out, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.sim_out}", flush=True)

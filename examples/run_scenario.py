@@ -38,7 +38,10 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--clients", type=int, default=12)
     ap.add_argument("--clusters", type=int, default=3)
-    ap.add_argument("--strategy", default="cwfl")
+    ap.add_argument("--strategy", default=None,
+                    help="aggregation strategy (repro.strategies registry; "
+                         "--list shows the registered names). Default: the "
+                         "scenario's pinned strategy, else cwfl")
     ap.add_argument("--snr-db", type=float, default=40.0,
                     help="overall SNR (ignored by snr-sweep's grid)")
     ap.add_argument("--hidden", type=int, default=64,
@@ -62,16 +65,24 @@ def main() -> None:
                             partition_iid)
     from repro.models import make_mnist_mlp, nll_loss
     from repro.sim import SCENARIOS, get_scenario, run_monte_carlo, run_rounds
+    from repro.strategies import available_strategies, get_strategy
     from repro.training import FLConfig
 
     if args.list:
         for name, sc in sorted(SCENARIOS.items()):
             dyn = "dynamic" if not sc.is_static else "static"
             grid = f" snr_grid={list(sc.snr_grid)}" if sc.snr_grid else ""
-            print(f"{name:16s} [{dyn}]{grid}")
+            pin = f" strategy={sc.strategy}" if sc.strategy else ""
+            print(f"{name:16s} [{dyn}]{grid}{pin}")
+        print(f"strategies: {', '.join(available_strategies())}")
         return
 
     scenario = get_scenario(args.scenario)
+    # Resolve through the ONE registry: an explicit --strategy wins, else
+    # the scenario's pinned default, else cwfl.  Unknown names fail here
+    # with the registry's own message listing every registered strategy.
+    strategy = (get_strategy(args.strategy) if args.strategy is not None
+                else scenario.default_strategy())
     tcfg = TopologyConfig(num_clients=args.clients, num_hotspots=3)
     topo = make_topology(jax.random.PRNGKey(7), tcfg)
     dcfg = SyntheticImageConfig.mnist_like(args.train, args.test)
@@ -79,7 +90,7 @@ def main() -> None:
     xs, ys = partition_iid(jax.random.PRNGKey(2), xtr, ytr, args.clients)
     init, apply = make_mnist_mlp(hidden=(args.hidden,))
     loss = lambda p, x, y: nll_loss(apply(p, x), y)
-    cfg = FLConfig(strategy=args.strategy, rounds=args.rounds,
+    cfg = FLConfig(strategy=strategy.name, rounds=args.rounds,
                    num_clusters=args.clusters, snr_db=args.snr_db,
                    eval_samples=args.test)
 
@@ -98,7 +109,7 @@ def main() -> None:
         mesh = make(args.devices or None)
         print(f"shard={args.shard} mesh={dict(mesh.shape)}")
 
-    print(f"scenario={args.scenario} strategy={args.strategy} "
+    print(f"scenario={args.scenario} strategy={strategy.name} "
           f"K={args.clients} rounds={args.rounds} seeds={args.seeds}")
     t0 = time.perf_counter()
     if args.seeds > 1 or scenario.snr_grid:
@@ -139,7 +150,7 @@ def main() -> None:
                   f"(over {acc.shape[0]} seeds)")
         payload = {
             "scenario": args.scenario,
-            "strategy": args.strategy,
+            "strategy": strategy.name,
             "shard": args.shard,
             "seeds": int(acc.shape[0]),
             "snr_grid": (None if h["snr_grid"] is None
@@ -160,7 +171,7 @@ def main() -> None:
             print(f"  round {r + 1:2d}  loss={l:.3f}  acc={a:.3f}")
         payload = {
             "scenario": args.scenario,
-            "strategy": args.strategy,
+            "strategy": strategy.name,
             "shard": args.shard,
             "seeds": 1,
             "test_acc": acc.tolist(),

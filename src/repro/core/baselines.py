@@ -8,9 +8,15 @@
                       Metropolis–Hastings doubly-stochastic mixing; K(K−1)
                       channel uses per round, per-link receiver noise.
 * FedProx           — a *local-objective* modification (proximal term), see
-                      ``repro.training.local.fedprox_grad`` — composes with
-                      any of the aggregation strategies above (the paper
-                      reports COTAF-Prox and CWFL-Prox).
+                      ``repro.training.local.fedprox_wrap`` — composes with
+                      any of the aggregation strategies above; the paper's
+                      COTAF-Prox and CWFL-Prox are registered as the
+                      first-class ``cotaf_prox`` / ``cwfl_prox`` strategies
+                      in `repro.strategies`.
+
+These are plain operators on stacked pytrees; their engine-facing
+packaging (setup/rebuild/receive rules, capability flags) lives in
+`repro.strategies.builtin`.
 """
 from __future__ import annotations
 

@@ -3,7 +3,8 @@
 Operates on *stacked client pytrees*: every leaf has a leading axis K (one
 slice per client).  The same operator is reused by:
 
-* the CPU-scale paper reproduction (vmap-ed clients, parameter aggregation),
+* the CPU-scale paper reproduction (vmap-ed clients, parameter aggregation,
+  packaged for the scenario engine as `repro.strategies.CWFLStrategy`),
 * the production-mesh integration (gradient aggregation inside shard_map,
   `repro.dist.ota_collectives`), and
 * the Pallas `ota_aggregate` kernel (flat-vector fast path).

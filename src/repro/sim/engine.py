@@ -17,9 +17,9 @@ Round body (identical math to the pre-engine loop):
 
 Scenario hooks (all `lax.scan`-carried, nothing touches the host):
 
-* time-varying channels  → per-round `state_from_plan` /
-  `cotaf_state_from_gains` / `decentralized_state_from_graph` rebuilds
-  from the `repro.sim.processes` channel view;
+* time-varying channels  → per-round ``Strategy.state_from_view``
+  rebuilds (`repro.strategies`) from the `repro.sim.processes` channel
+  view;
 * client scheduling      → participation masks folded into the round
   coefficients (mask-aware renormalization) on the transmit side, and a
   keep-local-params ``where`` on the receive side;
@@ -33,13 +33,14 @@ structure for A/B benchmarking and the equivalence test).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, channel as ch, clustering as cl, cwfl
+from repro.core import channel as ch
 from repro.core.topology import Topology, TopologyConfig
 from repro.models.small import accuracy as _accuracy
 from repro.optim import sgd
@@ -47,7 +48,8 @@ from repro.sim.processes import (ChannelView, channel_view, csi_perturbation,
                                  init_channel, step_channel)
 from repro.sim.scenarios import Scenario
 from repro.sim.scheduling import init_schedule, participation_mask
-from repro.training.federated import FLConfig, STRATEGIES
+from repro.strategies import get_strategy
+from repro.training.federated import FLConfig
 from repro.training.local import make_local_runner
 
 # fold_in salt separating the scenario-process key stream (channel, masks,
@@ -70,11 +72,18 @@ def make_round_local_runner(loss_fn: Callable, cfg: FLConfig, n_k: int):
     it: E epochs of minibatch SGD over a client's ``n_k`` examples.
     Returns ``(optimizer, local_run)``; `repro.sim.sharded` reuses this
     so the sharded trajectory can never drift from the engine's step
-    budget or optimizer construction."""
+    budget or optimizer construction.
+
+    The FedProx µ_p resolves through the strategy (prox variants such as
+    ``cwfl_prox`` carry the paper's default; an explicit
+    ``cfg.mu_prox > 0`` overrides it) — `repro.training.local.
+    fedprox_wrap` then wires the proximal local objective in."""
+    strategy = get_strategy(cfg.strategy)
     optimizer = sgd(cfg.lr)
     steps_per_round = max(cfg.local_epochs * (n_k // cfg.batch_size), 1)
-    return optimizer, make_local_runner(loss_fn, optimizer, cfg.batch_size,
-                                        steps_per_round, cfg.mu_prox)
+    return optimizer, make_local_runner(
+        loss_fn, optimizer, cfg.batch_size, steps_per_round,
+        strategy.effective_mu_prox(cfg.mu_prox))
 
 
 def _tree_where(mask: jnp.ndarray, a, b):
@@ -93,10 +102,18 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
     scan carry + per-round inputs, ``body`` is the round function.  Both
     are pure jnp — jit them together (scan mode, Monte-Carlo vmap) or
     run `prepare` eagerly and jit `body` alone (legacy loop mode)."""
-    if cfg.strategy not in STRATEGIES:
-        raise KeyError(f"unknown strategy {cfg.strategy!r}; "
-                       f"choose from {sorted(STRATEGIES)}")
-    setup_fn, aggregate_fn = STRATEGIES[cfg.strategy]
+    strategy = get_strategy(cfg.strategy)
+    if scenario.strategy is not None and scenario.strategy != strategy.name:
+        # The scenario pins a preferred strategy (resolved by CLIs when no
+        # explicit choice is given) but FLConfig.strategy always wins in
+        # the engine — since the config default is indistinguishable from
+        # an explicit choice, the override must at least be loud.
+        warnings.warn(
+            f"scenario {scenario.name!r} pins strategy "
+            f"{scenario.strategy!r} but the run uses cfg.strategy="
+            f"{strategy.name!r}; pass FLConfig(strategy="
+            f"{scenario.strategy!r}) to honor the scenario's pin",
+            UserWarning, stacklevel=3)
 
     K, n_k = xs.shape[0], xs.shape[1]
     static = scenario.is_static
@@ -117,8 +134,7 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
     def prepare(seed, snr_db):
         key = jax.random.PRNGKey(seed)
         k_state, k_init, k_rounds = jax.random.split(key, 3)
-        state0 = setup_fn(topology, k_state, num_clusters=cfg.num_clusters,
-                          snr_db=snr_db)
+        state0 = strategy.init(topology, k_state, cfg, snr_db=snr_db)
         params0 = init_fn(k_init)
         stacked = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (K,) + x.shape), params0)
@@ -138,7 +154,7 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
             if dyn_chan:
                 carry["chan"] = init_channel(
                     topology, topo_cfg, jax.random.fold_in(key, _SIM_SALT + 1))
-            if cfg.strategy == "cwfl" and recluster > 0:
+            if strategy.reclusters and recluster > 0:
                 carry["plan"] = state0.plan
             state0 = (state0, jnp.asarray(nv, jnp.float32))
         return state0, carry, scan_xs
@@ -180,61 +196,34 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
             # Imperfect CSI hits every strategy that water-fills power
             # from channel estimates (CWFL member→head, COTAF →server).
             csi = (csi_perturbation(k_csi, K, scenario.channel.csi_error_std)
-                   if scenario.channel.csi_error_std > 0 else None)
-            recv = mask   # who gets the downlink (may widen below)
+                   if (strategy.water_fills
+                       and scenario.channel.csi_error_std > 0) else None)
 
-            if cfg.strategy == "cwfl":
-                if recluster > 0:
-                    plan = jax.lax.cond(
-                        (t % recluster) == 0,
-                        lambda: cl.make_cluster_plan(
-                            view.link_snr, view.adjacency, cfg.num_clusters,
-                            k_cluster),
-                        lambda: carry["plan"])
-                    carry["plan"] = plan
-                else:
-                    plan = state0.plan
-                state = cwfl.state_from_plan(plan, view.link_gain,
-                                             total_power, nv,
-                                             csi_perturb=csi)
-                new, consensus = cwfl.aggregate(stacked, state, k_agg,
+            plan = None
+            if strategy.reclusters and recluster > 0:
+                plan = jax.lax.cond(
+                    (t % recluster) == 0,
+                    lambda: strategy.recluster(view, cfg.num_clusters,
+                                               k_cluster),
+                    lambda: carry["plan"])
+                carry["plan"] = plan
+
+            state = strategy.state_from_view(state0, view, nv, csi=csi,
+                                             mask=mask, plan=plan)
+            new, consensus = strategy.aggregate(stacked, state, k_agg,
                                                 mask=mask)
-                if mask is not None:
-                    # Heads are forced present on the transmit side
-                    # (cwfl.participation_weights) — they ARE the phase-1/2
-                    # receivers — so they must also keep the aggregate they
-                    # computed rather than revert to their local params.
-                    recv = cwfl.participation_weights(state, mask)
-            elif cfg.strategy == "cotaf":
-                state = baselines.cotaf_state_from_gains(
-                    view.link_gain, total_power, nv, csi_perturb=csi)
-                new, consensus = baselines.cotaf_aggregate(stacked, state,
-                                                           k_agg, mask=mask)
-                if mask is not None:
-                    # Same receiver rule as CWFL heads: the server holds
-                    # the aggregate, so it keeps it.
-                    recv = baselines.cotaf_participation(state, mask)
-            elif cfg.strategy == "fedavg":
-                new, consensus = baselines.fedavg_aggregate(stacked,
-                                                            weights=mask)
-            else:  # decentralized: prune the graph instead of masking the
-                # MAC — Metropolis weights give isolated (absent) nodes
-                # W(k,k)=1, so they keep their parameters with zero noise.
-                adj = view.adjacency
-                if mask is not None:
-                    mb = mask > 0
-                    adj = adj & mb[:, None] & mb[None, :]
-                state = baselines.decentralized_state_from_graph(
-                    adj, total_power, nv)
-                new, consensus = baselines.decentralized_aggregate(
-                    stacked, state, k_agg)
-                mask = None
 
-            if mask is not None:
+            recv = (strategy.receive_mask(state, mask)
+                    if mask is not None else None)
+            if recv is not None:
                 # Receive side: absent clients keep their locally-trained
-                # params (no downlink for a client out of the round); if
-                # NOBODY participated the sync is skipped and the previous
-                # consensus stands (also swallows fedavg's 0/0 weights).
+                # params (no downlink for a client out of the round) while
+                # forced-present receivers (heads/server) keep the
+                # aggregate they hold; if NOBODY participated the sync is
+                # skipped and the previous consensus stands (also swallows
+                # fedavg's 0/0 weights).  A ``None`` recv means the
+                # aggregate already encodes absences (decentralized's
+                # pruned graph) — no fold at all.
                 present = jnp.sum(mask) > 0
                 new = _tree_where(recv * present, new, stacked)
                 consensus = jax.tree.map(
@@ -249,7 +238,8 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
             stacked, opt_state, losses = jax.vmap(local_run)(
                 carry["stacked"], carry["opt"], xs, ys, client_keys)
             if static:
-                stacked, consensus = aggregate_fn(stacked, state0, k_agg)
+                stacked, consensus = strategy.aggregate(stacked, state0,
+                                                        k_agg)
             else:
                 stacked, consensus = dynamic_sync(carry, stacked, inp, k_agg)
             logits = apply_fn(consensus, x_ev)

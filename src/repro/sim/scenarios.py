@@ -15,6 +15,10 @@ Registry (see DESIGN.md §Sim for the math behind each knob):
   hierarchical setting).
 * ``straggler-heavy`` — 25% i.i.d. dropout plus three deterministic
   stragglers missing every third round, on the static channel.
+* ``straggler-prox``  — the same harsh schedule with the scenario
+  pinning the ``cwfl_prox`` strategy (paper §V's FedProx answer to
+  partial participation / heterogeneity) as its registry-resolved
+  default.
 * ``snr-sweep``       — static channel, Monte-Carlo grid over overall
   SNR ξ ∈ {0, 10, 20, 30, 40} dB (the x-axis of the paper's noise-floor
   claims); `run_monte_carlo` vmaps the whole grid into one jit.
@@ -25,10 +29,11 @@ Registry (see DESIGN.md §Sim for the math behind each knob):
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 from repro.sim.processes import ChannelProcessConfig
 from repro.sim.scheduling import ScheduleConfig
+from repro.strategies import get_strategy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,12 +43,22 @@ class Scenario:
     schedule: ScheduleConfig = ScheduleConfig()
     recluster_every: int = 0              # re-run clustering every n rounds (0=never)
     snr_grid: Tuple[float, ...] = ()      # Monte-Carlo SNR axis (dB); () = cfg.snr_db
+    #: Default strategy for this scenario, resolved through the
+    #: `repro.strategies` registry (``None`` = caller's choice).  CLIs use
+    #: it when no ``--strategy`` is given; ``FLConfig.strategy`` always
+    #: wins inside the engine.
+    strategy: Optional[str] = None
 
     @property
     def is_static(self) -> bool:
         """True ⇒ the engine takes the bit-exact paper-static fast path."""
         return (not self.channel.is_dynamic and self.schedule.is_trivial
                 and self.recluster_every <= 0)
+
+    def default_strategy(self, fallback: str = "cwfl"):
+        """The scenario's preferred `Strategy` object (registry-resolved),
+        or ``fallback``'s when the scenario doesn't pin one."""
+        return get_strategy(self.strategy or fallback)
 
 
 SCENARIOS = {
@@ -57,6 +72,11 @@ SCENARIOS = {
         name="straggler-heavy",
         schedule=ScheduleConfig(dropout_prob=0.25, num_stragglers=3,
                                 straggler_period=3)),
+    "straggler-prox": Scenario(
+        name="straggler-prox",
+        schedule=ScheduleConfig(dropout_prob=0.25, num_stragglers=3,
+                                straggler_period=3),
+        strategy="cwfl_prox"),
     "snr-sweep": Scenario(
         name="snr-sweep",
         snr_grid=(0.0, 10.0, 20.0, 30.0, 40.0)),

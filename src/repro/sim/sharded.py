@@ -47,6 +47,7 @@ from repro.launch.mesh import make_client_mesh, make_mc_mesh
 from repro.models.small import accuracy as _accuracy
 from repro.sim.engine import _SCAN_UNROLL, make_round_local_runner
 from repro.sim.scenarios import Scenario
+from repro.strategies import get_strategy
 from repro.training.federated import FLConfig
 
 
@@ -220,10 +221,13 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
         raise NotImplementedError(
             "shard='clients' supports static scenarios only (dynamic "
             "masking/re-clustering haven't been taught the sharded sync)")
-    if cfg.strategy != "cwfl":
+    strategy = get_strategy(cfg.strategy)
+    if not strategy.supports_client_sharding:
         raise NotImplementedError(
-            f"shard='clients' implements the CWFL sync collective only; "
-            f"got strategy {cfg.strategy!r}")
+            f"shard='clients' needs a strategy whose sync is implemented "
+            f"as a client-axis mesh collective (supports_client_sharding); "
+            f"{type(strategy).__name__} (strategy {cfg.strategy!r}) has "
+            f"none")
     if mesh is None:
         mesh = make_client_mesh()
     if "clients" not in mesh.axis_names:

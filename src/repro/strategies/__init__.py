@@ -1,0 +1,13 @@
+"""repro.strategies — the pluggable aggregation-strategy registry.
+
+One `Strategy` object per algorithm (CWFL, CWFL-Prox, COTAF, COTAF-Prox,
+FedAvg, decentralized) owning setup, the scan-legal per-round state
+rebuild, the sync round, the receive-side participation rule, and the
+capability flags the engine/sharded layers gate on.  See DESIGN.md
+§Strategy-API for the protocol and a worked "add a strategy" example.
+"""
+from repro.strategies.base import (Strategy, available_strategies,
+                                   get_strategy, register_strategy)
+from repro.strategies.builtin import (PAPER_MU_PROX, COTAFStrategy,
+                                      CWFLStrategy, DecentralizedStrategy,
+                                      FedAvgStrategy)

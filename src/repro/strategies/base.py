@@ -1,0 +1,200 @@
+"""The Strategy protocol + registry (DESIGN.md §Strategy-API).
+
+The paper's contribution is a *family* of aggregation strategies (CWFL,
+CWFL-Prox, the COTAF-style central server, fully-decentralized consensus),
+and every layer of this repo used to re-dispatch on the strategy *name*:
+`training.federated.STRATEGIES` held bare ``(setup, aggregate)`` tuples,
+`sim/engine.py` re-branched ``if cfg.strategy == "cwfl" / "cotaf" / ...``
+to rebuild per-round states and pick receive-side rules, and
+`sim/sharded.py` hard-rejected everything but ``"cwfl"``.  This module is
+the single seam that replaces all of it: a :class:`Strategy` object owns
+the whole per-strategy surface —
+
+* ``init(topology, key, cfg, snr_db)``      — offline setup → State;
+* ``state_from_view(state0, view, noise_var, ...)`` — the per-round
+  scan-legal rebuild from a `repro.sim.processes.ChannelView` (pure jnp,
+  traces under ``lax.scan``/``vmap``);
+* ``aggregate(stacked, state, key, mask)``  — one sync round;
+* ``receive_mask(state, mask)``             — the heads/server
+  forced-present downlink rule (``None`` ⇒ the aggregate already encodes
+  absences, e.g. decentralized's pruned Metropolis graph);
+* capability flags (``supports_client_sharding``, ``needs_graph``,
+  ``water_fills``, ``reclusters``) that gate the sharded/simulated
+  execution paths instead of name string checks.
+
+``register_strategy(name)`` adds a strategy to the registry every
+front door resolves through: ``FLConfig.strategy``, ``Scenario.strategy``
+(`repro.sim.scenarios`), and ``examples/run_scenario.py --strategy``.
+Adding a new OTA variant (hierarchical clustering à la arXiv 2207.09232,
+heterogeneous-data precoding à la Sery et al.) is one subclass + one
+``register_strategy`` call — no engine/sharded/training edits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Optional
+
+State = Any   # strategy state: any registered pytree (None for stateless)
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """One aggregation strategy: offline setup, per-round state rebuild,
+    the sync round itself, and the receive-side participation rule.
+
+    Instances are frozen dataclasses so a *variant* is just another
+    instance of the same class (``CWFLStrategy(name="cwfl_prox",
+    mu_prox=0.1)`` — same channel math, proximal local objective).
+    Capability flags are ``ClassVar``s: they describe the *algorithm*,
+    not the instance.
+    """
+
+    name: str
+    #: Default FedProx µ_p for the local objective (paper §V).  0 = plain
+    #: SGD.  An explicit ``FLConfig.mu_prox > 0`` overrides it — see
+    #: :meth:`effective_mu_prox`; prox variants (``cwfl_prox``,
+    #: ``cotaf_prox``) set the paper's 0.1 here so they are first-class
+    #: named strategies rather than a config side-channel.
+    mu_prox: float = 0.0
+
+    # -- capability flags ---------------------------------------------------
+    #: The client-sharded trajectory (`repro.sim.sharded.
+    #: run_rounds_client_sharded`) implements this strategy's sync as a
+    #: mesh collective.
+    supports_client_sharding: ClassVar[bool] = False
+    #: The per-round state depends on the connectivity graph
+    #: (``ChannelView.adjacency``), not only on link gains.
+    needs_graph: ClassVar[bool] = False
+    #: Power is water-filled from channel estimates ⇒ imperfect CSI
+    #: (`repro.sim.processes.csi_perturbation`) perturbs this strategy.
+    water_fills: ClassVar[bool] = False
+    #: The state carries a cluster plan that periodic on-device
+    #: re-clustering (`Scenario.recluster_every`) can replace.
+    reclusters: ClassVar[bool] = False
+
+    # -- the protocol -------------------------------------------------------
+    def init(self, topology, key, cfg, snr_db: Optional[float] = None
+             ) -> State:
+        """Offline setup (cluster, water-fill, budget noise) → State.
+
+        ``cfg`` is the `FLConfig` (only strategy-relevant fields such as
+        ``num_clusters`` are read); ``snr_db`` is the *resolved* overall
+        SNR — it may be a traced scalar (a vmapped Monte-Carlo SNR axis)
+        and therefore overrides ``cfg.snr_db``; ``None`` keeps the
+        topology's own noise budget.
+        """
+        raise NotImplementedError
+
+    def state_from_view(self, state0: State, view, noise_var, *,
+                        csi=None, mask=None, plan=None) -> State:
+        """Rebuild the round state from a channel view — the scan-legal
+        per-round half of :meth:`init` (pure jnp; ``noise_var`` may be a
+        tracer).
+
+        ``state0``: the :meth:`init` state (source of statics such as
+        ``total_power`` and the offline cluster plan); ``csi``: optional
+        (K,) multiplicative water-filling-gain perturbation (imperfect
+        CSI — only meaningful when :attr:`water_fills`); ``mask``:
+        optional (K,) {0,1} participation — only graph-based strategies
+        (:attr:`needs_graph`) fold it here, by pruning edges; everyone
+        else folds it in :meth:`aggregate`; ``plan``: optional
+        re-clustered plan (:meth:`recluster`) replacing ``state0``'s.
+        """
+        raise NotImplementedError
+
+    def aggregate(self, stacked_params, state: State, key, mask=None):
+        """One sync round on a K-stacked pytree.  Returns
+        ``(new_stacked_params, consensus)``.  ``mask`` is the raw (K,)
+        {0,1} participation (transmit side; forced-present rules are the
+        strategy's own business) — strategies that already folded it into
+        ``state`` (see :meth:`state_from_view`) ignore it here.
+        """
+        raise NotImplementedError
+
+    def receive_mask(self, state: State, mask):
+        """(K,) effective *receive*-side participation for one masked
+        round: which clients adopt the broadcast aggregate (1) vs keep
+        their locally-trained params (0).  Nodes the aggregation forces
+        present (CWFL cluster-heads, the COTAF server — they *hold* the
+        aggregate) must stay 1 even when masked out.  Return ``None``
+        when the aggregate already encodes absences (decentralized:
+        isolated nodes get ``W(k,k)=1``) — the engine then applies no
+        receive-side fold at all.
+        """
+        return mask
+
+    def recluster(self, view, num_clusters: int, key):
+        """Re-derive the cluster plan from a channel view (only called
+        when :attr:`reclusters`; `lax.cond`-gated inside the scan)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no cluster plan to rebuild")
+
+    def effective_mu_prox(self, cfg_mu: float) -> float:
+        """FedProx µ_p for the local runner: an explicit per-run
+        ``FLConfig.mu_prox`` wins; otherwise the strategy default."""
+        return cfg_mu if cfg_mu > 0 else self.mu_prox
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Strategy] = {}
+
+
+def register_strategy(name: str, strategy: Optional[Strategy] = None, *,
+                      replace: bool = False):
+    """Register ``strategy`` under ``name``.
+
+    Two forms::
+
+        register_strategy("cwfl", CWFLStrategy(name="cwfl"))
+
+        @register_strategy("my_ota")          # decorator on a Strategy
+        class MyOTAStrategy(Strategy):        # subclass: instantiated
+            ...                               # with name=<name>
+
+    ``replace=True`` allows overwriting (tests, experiment sweeps);
+    silent shadowing of a registered name is otherwise an error.
+    """
+
+    def _register(obj):
+        strat = obj(name=name) if isinstance(obj, type) else obj
+        if not isinstance(strat, Strategy):
+            raise TypeError(
+                f"register_strategy needs a Strategy (or Strategy "
+                f"subclass); got {type(strat).__name__}")
+        if name in _REGISTRY and not replace:
+            raise ValueError(
+                f"strategy {name!r} is already registered "
+                f"({type(_REGISTRY[name]).__name__}); pass replace=True "
+                f"to overwrite")
+        _REGISTRY[name] = strat
+        return obj
+
+    if strategy is None:
+        return _register
+    return _register(strategy)
+
+
+def get_strategy(name) -> Strategy:
+    """Resolve a strategy by name (or pass a `Strategy` instance through).
+
+    The ONE place strategy names are validated — every front door
+    (`FLConfig.strategy` via the engine, `Scenario.strategy`,
+    ``run_scenario.py --strategy``) funnels through here, so the error
+    message always lists the full current registry, including strategies
+    registered by downstream code.
+    """
+    if isinstance(name, Strategy):
+        return name
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown strategy {name!r}; "
+                       f"choose from {available_strategies()}") from None
+
+
+def available_strategies() -> list[str]:
+    """Sorted names of every registered strategy."""
+    return sorted(_REGISTRY)

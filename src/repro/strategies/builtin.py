@@ -1,0 +1,157 @@
+"""The paper's strategy family, ported onto the Strategy protocol.
+
+* ``cwfl`` / ``cwfl_prox`` — Algorithm 1's clustered two-phase OTA
+  aggregation (`repro.core.cwfl`); the prox variant runs the same channel
+  with the FedProx local objective (µ_p = 0.1, paper §V).
+* ``cotaf`` / ``cotaf_prox`` — the modified-COTAF central-server baseline:
+  one shared MAC to the best-connected client (`repro.core.baselines`).
+* ``fedavg`` — ideal noiseless server aggregation (upper bound).
+* ``decentralized`` — Metropolis–Hastings consensus over G(V, L); absence
+  is graph pruning, not MAC masking (isolated nodes keep their params).
+
+Each strategy delegates to the same `repro.core` operators the old
+string-dispatch called, in the same order — the port is bit-neutral
+(pinned by ``tests/goldens/paper_static_T4_K8.json``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Optional
+
+from repro.core import baselines, clustering as cl, cwfl
+from repro.strategies.base import Strategy, register_strategy
+
+
+def _snr_noise_var(topology, snr_db):
+    """Resolved receiver noise variance: the topology's own budget, or the
+    variance hitting an overall SNR override (possibly a traced scalar)."""
+    from repro.core import channel as ch
+    if snr_db is None:
+        return topology.noise_var
+    return ch.snr_db_to_noise_var(topology.total_power, snr_db)
+
+
+@dataclasses.dataclass(frozen=True)
+class CWFLStrategy(Strategy):
+    """Algorithm 1: cluster on SNR, water-fill, two-phase OTA aggregation."""
+
+    supports_client_sharding: ClassVar[bool] = True
+    water_fills: ClassVar[bool] = True
+    reclusters: ClassVar[bool] = True
+
+    def init(self, topology, key, cfg, snr_db: Optional[float] = None):
+        return cwfl.setup(
+            topology,
+            cwfl.CWFLConfig(num_clusters=cfg.num_clusters, snr_db=snr_db),
+            key)
+
+    def state_from_view(self, state0, view, noise_var, *,
+                        csi=None, mask=None, plan=None):
+        del mask   # folded into the round coefficients by aggregate()
+        return cwfl.state_from_plan(
+            state0.plan if plan is None else plan,
+            view.link_gain, state0.total_power, noise_var, csi_perturb=csi)
+
+    def aggregate(self, stacked_params, state, key, mask=None):
+        return cwfl.aggregate(stacked_params, state, key, mask=mask)
+
+    def receive_mask(self, state, mask):
+        # Heads are forced present on the transmit side — they ARE the
+        # phase-1/2 receivers — so they also keep the aggregate they
+        # computed rather than revert to their local params.
+        return cwfl.participation_weights(state, mask)
+
+    def recluster(self, view, num_clusters: int, key):
+        return cl.make_cluster_plan(view.link_snr, view.adjacency,
+                                    num_clusters, key)
+
+
+@dataclasses.dataclass(frozen=True)
+class COTAFStrategy(Strategy):
+    """Modified COTAF: all K clients on ONE MAC to a central server."""
+
+    water_fills: ClassVar[bool] = True
+
+    def init(self, topology, key, cfg, snr_db: Optional[float] = None):
+        return baselines.cotaf_setup(topology, key, snr_db=snr_db)
+
+    def state_from_view(self, state0, view, noise_var, *,
+                        csi=None, mask=None, plan=None):
+        del mask, plan
+        return baselines.cotaf_state_from_gains(
+            view.link_gain, state0.total_power, noise_var, csi_perturb=csi)
+
+    def aggregate(self, stacked_params, state, key, mask=None):
+        return baselines.cotaf_aggregate(stacked_params, state, key,
+                                         mask=mask)
+
+    def receive_mask(self, state, mask):
+        # Same receiver rule as CWFL heads: the server holds the
+        # aggregate, so it keeps it.
+        return baselines.cotaf_participation(state, mask)
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgStrategy(Strategy):
+    """Ideal noiseless server aggregation (eq. 2) — stateless."""
+
+    def init(self, topology, key, cfg, snr_db: Optional[float] = None):
+        del topology, key, cfg, snr_db
+        return None
+
+    def state_from_view(self, state0, view, noise_var, *,
+                        csi=None, mask=None, plan=None):
+        del state0, view, noise_var, csi, mask, plan
+        return None
+
+    def aggregate(self, stacked_params, state, key, mask=None):
+        del state, key
+        return baselines.fedavg_aggregate(stacked_params, weights=mask)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecentralizedStrategy(Strategy):
+    """Fully-decentralized Metropolis–Hastings consensus over G(V, L)."""
+
+    needs_graph: ClassVar[bool] = True
+
+    def init(self, topology, key, cfg, snr_db: Optional[float] = None):
+        return baselines.decentralized_setup(topology, key, snr_db=snr_db)
+
+    def state_from_view(self, state0, view, noise_var, *,
+                        csi=None, mask=None, plan=None):
+        del csi, plan
+        # Absence is graph pruning, not MAC masking: Metropolis weights
+        # give isolated (absent) nodes W(k,k)=1, so they keep their
+        # parameters with zero noise.
+        adj = view.adjacency
+        if mask is not None:
+            mb = mask > 0
+            adj = adj & mb[:, None] & mb[None, :]
+        return baselines.decentralized_state_from_graph(
+            adj, state0.total_power, noise_var)
+
+    def aggregate(self, stacked_params, state, key, mask=None):
+        del mask   # already pruned into the Metropolis graph
+        return baselines.decentralized_aggregate(stacked_params, state, key)
+
+    def receive_mask(self, state, mask):
+        # The mixing matrix already encodes absences — no receive-side
+        # fold (and no sync-skip guard) on top.
+        return None
+
+
+# Paper §V's FedProx coefficient for the *-Prox curves.
+PAPER_MU_PROX = 0.1
+
+register_strategy("cwfl", CWFLStrategy(name="cwfl"))
+register_strategy("cotaf", COTAFStrategy(name="cotaf"))
+register_strategy("fedavg", FedAvgStrategy(name="fedavg"))
+register_strategy("decentralized", DecentralizedStrategy(name="decentralized"))
+# CWFL-Prox / COTAF-Prox are headline curves of the paper (Fig. 2 non-IID):
+# same channel, proximal local objective — first-class names, not a
+# mu_prox side-channel.
+register_strategy("cwfl_prox",
+                  CWFLStrategy(name="cwfl_prox", mu_prox=PAPER_MU_PROX))
+register_strategy("cotaf_prox",
+                  COTAFStrategy(name="cotaf_prox", mu_prox=PAPER_MU_PROX))

@@ -1,2 +1,4 @@
 from repro.training.local import make_local_runner, fedprox_wrap
+# STRATEGIES is a deprecated read-only view of repro.strategies (one
+# release); new code resolves strategies via repro.strategies.get_strategy.
 from repro.training.federated import FLConfig, run_federated, STRATEGIES

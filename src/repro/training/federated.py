@@ -1,72 +1,81 @@
-"""The federated strategy registry + compatibility front door.
+"""The paper-protocol front door (`run_federated` + `FLConfig`).
 
 One round = E local epochs at every client in parallel (vmap) followed by one
 synchronization (t ∈ H) under the selected aggregation strategy.  The round
 loop itself lives in :mod:`repro.sim.engine` (a `lax.scan` over rounds,
 vmap-able over seeds/scenario scalars); `run_federated` is the stable
 paper-protocol entry point wrapping it.
+
+Strategies are first-class objects now: ``FLConfig.strategy`` names an
+entry in the :mod:`repro.strategies` registry (``get_strategy`` /
+``register_strategy``).  The old ``STRATEGIES`` mapping of bare
+``(setup, aggregate)`` tuples remains as a deprecated read-only view for
+one release — see the README migration note.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
+from collections.abc import Mapping
 from typing import Any, Callable, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, cwfl
 from repro.core.topology import Topology
+from repro.strategies import available_strategies, get_strategy
 
 
-# ---------------------------------------------------------------------------
-# Strategy registry: name -> (setup, aggregate).
-# ---------------------------------------------------------------------------
+class _DeprecatedStrategies(Mapping):
+    """Read-only ``name -> (setup, aggregate)`` view of the strategy
+    registry, kept for one release so pre-Strategy-API callers keep
+    working.  Every *access* (not the import) warns — new code should
+    resolve `repro.strategies.get_strategy` and call the `Strategy`
+    object directly."""
 
-def _cwfl_setup(topology, key, *, num_clusters=3, snr_db=None, **_):
-    return cwfl.setup(topology, cwfl.CWFLConfig(num_clusters=num_clusters,
-                                                snr_db=snr_db), key)
+    @staticmethod
+    def _warn():
+        warnings.warn(
+            "repro.training.STRATEGIES is deprecated; use "
+            "repro.strategies.get_strategy(name) and the Strategy object "
+            "(init/aggregate) instead", DeprecationWarning, stacklevel=3)
+
+    def __getitem__(self, name):
+        self._warn()
+        strategy = get_strategy(name)
+
+        def setup(topology, key, *, num_clusters=3, snr_db=None, **_):
+            cfg = FLConfig(strategy=strategy.name, num_clusters=num_clusters)
+            return strategy.init(topology, key, cfg, snr_db=snr_db)
+
+        def aggregate(params, state, key):
+            return strategy.aggregate(params, state, key)
+
+        return setup, aggregate
+
+    def __iter__(self):
+        self._warn()
+        return iter(available_strategies())
+
+    def __len__(self):
+        self._warn()
+        return len(available_strategies())
 
 
-def _cwfl_aggregate(params, state, key):
-    return cwfl.aggregate(params, state, key)
-
-
-def _cotaf_setup(topology, key, *, snr_db=None, **_):
-    return baselines.cotaf_setup(topology, key, snr_db=snr_db)
-
-
-def _fedavg_setup(topology, key, **_):
-    del topology, key
-    return None
-
-
-def _fedavg_aggregate(params, state, key):
-    del state, key
-    return baselines.fedavg_aggregate(params)
-
-
-def _dec_setup(topology, key, *, snr_db=None, **_):
-    return baselines.decentralized_setup(topology, key, snr_db=snr_db)
-
-
-STRATEGIES = {
-    "cwfl": (_cwfl_setup, _cwfl_aggregate),
-    "cotaf": (_cotaf_setup, baselines.cotaf_aggregate),
-    "fedavg": (_fedavg_setup, _fedavg_aggregate),
-    "decentralized": (_dec_setup, baselines.decentralized_aggregate),
-}
+STRATEGIES = _DeprecatedStrategies()
 
 
 @dataclasses.dataclass(frozen=True)
 class FLConfig:
-    strategy: str = "cwfl"
+    strategy: str = "cwfl"           # resolved via repro.strategies registry
     rounds: int = 70                 # paper: 70-80 communication rounds
     local_epochs: int = 1            # E
     batch_size: int = 64             # paper: 64 (MNIST) / 32 (CIFAR)
     lr: float = 1e-3                 # paper: 0.001
     num_clusters: int = 3            # paper: 3 optimal
     snr_db: Optional[float] = 40.0   # paper: overall SNR 40 dB
-    mu_prox: float = 0.0             # FedProx µ_p (0 = off)
+    mu_prox: float = 0.0             # FedProx µ_p override (0 = use the
+                                     # strategy's default, e.g. cwfl_prox)
     eval_samples: int = 2048
     seed: int = 0
 

@@ -24,7 +24,18 @@ import numpy as np
 
 
 GOLDEN_DIR = os.path.dirname(os.path.abspath(__file__))
+# The four strategies the fixture pins (the paper's original comparison
+# set).  Resolved through the repro.strategies registry like every other
+# front door — prox variants share their base strategy's channel math, so
+# at the fixture's 1-local-step-per-round protocol they replay the same
+# bits and need no separate goldens.
 STRATEGIES = ("cwfl", "cotaf", "fedavg", "decentralized")
+
+
+def _check_registered():
+    from repro.strategies import get_strategy
+    for name in STRATEGIES:
+        get_strategy(name)   # KeyError with the registry's listing if not
 
 
 def workload():
@@ -63,6 +74,7 @@ def bits(x: np.ndarray) -> list:
 
 
 def main() -> None:
+    _check_registered()
     payload = {
         "protocol": {
             "scenario": "paper-static", "rounds": 4, "clients": 8,

@@ -190,7 +190,9 @@ def test_client_sharded_guards(setup):
     from repro.sim import ChannelProcessConfig
     init, apply, loss, topo, xs, ys, xte, yte = setup
     cfg = FLConfig(strategy="cotaf", rounds=1, eval_samples=64)
-    with pytest.raises(NotImplementedError, match="CWFL"):
+    # capability-flag gate names the strategy's class, not a hard-coded
+    # name check
+    with pytest.raises(NotImplementedError, match="COTAFStrategy"):
         run_rounds(init, apply, loss, topo, xs, ys, xte, yte, cfg,
                    shard="clients")
     cfg = FLConfig(strategy="cwfl", rounds=1, eval_samples=64)

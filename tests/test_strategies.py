@@ -1,0 +1,337 @@
+"""Strategy-API conformance (repro.strategies, DESIGN.md §Strategy-API).
+
+Parametrized over EVERY registered strategy — a new `register_strategy`
+entry is automatically held to the same contract:
+
+* the init state is a registered pytree (jit/scan-carry legal);
+* an all-ones participation mask is bit-identical to no mask at all
+  (state rebuild AND aggregation);
+* the masked receive rule keeps forced-present nodes (CWFL heads, the
+  COTAF server) and never drops a participant;
+* ``state_from_view`` + ``aggregate`` are jit/vmap-legal inside a
+  2-round ``lax.scan`` (the engine's execution shape).
+
+CI runs this module with ``-W error::DeprecationWarning`` scoped to
+``repro.*`` — the library itself must not lean on its own deprecated
+aliases (`repro.training.STRATEGIES`).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TopologyConfig, channel as ch, make_topology
+from repro.sim.processes import ChannelView
+from repro.strategies import (COTAFStrategy, CWFLStrategy,
+                              DecentralizedStrategy, FedAvgStrategy,
+                              PAPER_MU_PROX, available_strategies,
+                              get_strategy, register_strategy)
+from repro.strategies.base import _REGISTRY
+from repro.training import FLConfig
+
+K = 8
+ALL = available_strategies()
+SNR_DB = 40.0
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return make_topology(jax.random.PRNGKey(7),
+                         TopologyConfig(num_clients=K, num_hotspots=3))
+
+
+def _view(topo):
+    return ChannelView(link_gain=topo.link_gain, link_snr=topo.link_snr,
+                       adjacency=topo.adjacency)
+
+
+def _stacked(key):
+    kw, kb = jax.random.split(key)
+    return {"w": jax.random.normal(kw, (K, 5, 3), jnp.float32),
+            "b": jax.random.normal(kb, (K, 3), jnp.float32)}
+
+
+def _cfg(name):
+    return FLConfig(strategy=name, num_clusters=3)
+
+
+def _noise_var(topo):
+    return ch.snr_db_to_noise_var(topo.total_power, SNR_DB)
+
+
+def _trees_bitwise_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return (len(la) == len(lb)
+            and all(bool(jnp.array_equal(x, y)) for x, y in zip(la, lb)))
+
+
+# ---------------------------------------------------------------------------
+# Conformance: every registered strategy.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL)
+def test_state_is_registered_pytree(topo, name):
+    """States ride scan carries and jit arguments — flatten/unflatten must
+    round-trip the exact type, and identity-jit must accept them."""
+    s = get_strategy(name)
+    state = s.init(topo, jax.random.PRNGKey(0), _cfg(name), snr_db=SNR_DB)
+    leaves, treedef = jax.tree.flatten(state)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert type(rebuilt) is type(state)
+    jitted = jax.jit(lambda st: st)(state)
+    assert _trees_bitwise_equal(jitted, state)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_aggregate_output_structure(topo, name):
+    """aggregate keeps the K-stacked structure and returns a consensus
+    shaped like ONE client's tree."""
+    s = get_strategy(name)
+    state = s.init(topo, jax.random.PRNGKey(0), _cfg(name), snr_db=SNR_DB)
+    stacked = _stacked(jax.random.PRNGKey(1))
+    new, consensus = s.aggregate(stacked, state, jax.random.PRNGKey(2))
+    assert (jax.tree.structure(new) == jax.tree.structure(stacked)
+            == jax.tree.structure(consensus))
+    for n, x, c in zip(jax.tree.leaves(new), jax.tree.leaves(stacked),
+                       jax.tree.leaves(consensus)):
+        assert n.shape == x.shape and c.shape == x.shape[1:]
+        assert bool(jnp.isfinite(n).all())
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_all_ones_mask_bit_identical_to_unmasked(topo, name):
+    """A full-participation round must be indistinguishable — bitwise —
+    from an unmasked one, in both the state rebuild and the aggregation
+    (the engine's all-ones-mask == static-path contract)."""
+    s = get_strategy(name)
+    view = _view(topo)
+    nv = _noise_var(topo)
+    state0 = s.init(topo, jax.random.PRNGKey(0), _cfg(name), snr_db=SNR_DB)
+    ones = jnp.ones((K,), jnp.float32)
+
+    st_masked = s.state_from_view(state0, view, nv, mask=ones)
+    st_plain = s.state_from_view(state0, view, nv, mask=None)
+    assert _trees_bitwise_equal(st_masked, st_plain)
+
+    stacked = _stacked(jax.random.PRNGKey(1))
+    key = jax.random.PRNGKey(2)
+    out_masked = s.aggregate(stacked, st_masked, key, mask=ones)
+    out_plain = s.aggregate(stacked, st_plain, key, mask=None)
+    assert _trees_bitwise_equal(out_masked, out_plain)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_receive_mask_keeps_forced_present(topo, name):
+    """Receive-side rule: nobody who participated is dropped, and the
+    nodes the aggregation forces present (CWFL heads, the COTAF server —
+    they HOLD the aggregate) stay present under any mask, including
+    all-zeros.  ``None`` is only legal when the aggregate itself encodes
+    absences (decentralized's pruned Metropolis graph)."""
+    s = get_strategy(name)
+    state = s.init(topo, jax.random.PRNGKey(0), _cfg(name), snr_db=SNR_DB)
+    rng = np.random.default_rng(3)
+    for mask_np in (np.zeros(K), np.ones(K),
+                    (rng.random(K) < 0.5).astype(np.float32)):
+        mask = jnp.asarray(mask_np, jnp.float32)
+        recv = s.receive_mask(state, mask)
+        if recv is None:
+            assert isinstance(s, DecentralizedStrategy)
+            continue
+        recv = np.asarray(recv)
+        assert recv.shape == (K,)
+        # never drop a participant
+        assert (recv >= mask_np - 1e-7).all()
+        if isinstance(s, CWFLStrategy):
+            heads = np.asarray(state.plan.head_mask) > 0
+            assert (recv[heads] == 1.0).all()
+            np.testing.assert_array_equal(recv[~heads], mask_np[~heads])
+        elif isinstance(s, COTAFStrategy):
+            server = int(np.asarray(state.server))
+            assert recv[server] == 1.0
+            others = np.arange(K) != server
+            np.testing.assert_array_equal(recv[others], mask_np[others])
+        elif isinstance(s, FedAvgStrategy):
+            np.testing.assert_array_equal(recv, mask_np)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_state_from_view_scan_vmap_legal(topo, name):
+    """The per-round rebuild must trace inside jit ∘ vmap ∘ scan — the
+    exact shape `repro.sim.engine` runs it in (2 rounds, 2 seeds)."""
+    s = get_strategy(name)
+    cfg = _cfg(name)
+    view = _view(topo)
+    nv = _noise_var(topo)
+
+    def traj(seed):
+        key = jax.random.PRNGKey(seed)
+        state0 = s.init(topo, key, cfg, snr_db=SNR_DB)
+        stacked = _stacked(jax.random.fold_in(key, 1))
+
+        def body(carry, k):
+            state = s.state_from_view(state0, view, nv)
+            new, cons = s.aggregate(carry, state, k)
+            return new, sum(jnp.sum(c) for c in jax.tree.leaves(cons))
+
+        keys = jax.random.split(jax.random.fold_in(key, 2), 2)
+        _, sums = jax.lax.scan(body, stacked, keys)
+        return sums
+
+    sums = jax.jit(jax.vmap(traj))(jnp.arange(2))
+    assert sums.shape == (2, 2)
+    assert bool(jnp.isfinite(sums).all())
+
+
+# ---------------------------------------------------------------------------
+# Capability flags + prox variants.
+# ---------------------------------------------------------------------------
+
+def test_capability_flags():
+    cwfl, cotaf = get_strategy("cwfl"), get_strategy("cotaf")
+    fedavg, dec = get_strategy("fedavg"), get_strategy("decentralized")
+    assert cwfl.supports_client_sharding and cwfl.water_fills \
+        and cwfl.reclusters and not cwfl.needs_graph
+    assert cotaf.water_fills and not cotaf.supports_client_sharding
+    assert dec.needs_graph and not dec.water_fills
+    assert not (fedavg.supports_client_sharding or fedavg.needs_graph
+                or fedavg.water_fills or fedavg.reclusters)
+
+
+def test_prox_variants_are_first_class():
+    """cwfl_prox/cotaf_prox: same class (same channel math, same flags),
+    paper µ_p baked in, overridable per run via FLConfig.mu_prox."""
+    for base_name, prox_name in (("cwfl", "cwfl_prox"),
+                                 ("cotaf", "cotaf_prox")):
+        base, prox = get_strategy(base_name), get_strategy(prox_name)
+        assert type(prox) is type(base)
+        assert prox.mu_prox == PAPER_MU_PROX and base.mu_prox == 0.0
+        assert prox.effective_mu_prox(0.0) == PAPER_MU_PROX
+        assert prox.effective_mu_prox(0.3) == 0.3     # explicit cfg wins
+        assert base.effective_mu_prox(0.0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Registry semantics.
+# ---------------------------------------------------------------------------
+
+def test_unknown_strategy_error_lists_registered_names():
+    with pytest.raises(KeyError) as ei:
+        get_strategy("nope")
+    msg = str(ei.value)
+    assert "unknown strategy" in msg
+    for name in available_strategies():
+        assert name in msg
+
+
+def test_error_message_includes_newly_registered_names():
+    name = "_test_registered_strategy"
+    register_strategy(name, CWFLStrategy(name=name))
+    try:
+        with pytest.raises(KeyError, match=name):
+            get_strategy("nope")
+        assert name in available_strategies()
+    finally:
+        _REGISTRY.pop(name)
+
+
+def test_register_rejects_duplicates_and_non_strategies():
+    with pytest.raises(ValueError, match="already registered"):
+        register_strategy("cwfl", CWFLStrategy(name="cwfl"))
+    with pytest.raises(TypeError, match="Strategy"):
+        register_strategy("_bogus", object())
+    # replace=True is the sanctioned overwrite path
+    register_strategy("_tmp", FedAvgStrategy(name="_tmp"))
+    try:
+        register_strategy("_tmp", FedAvgStrategy(name="_tmp"),
+                          replace=True)
+    finally:
+        _REGISTRY.pop("_tmp")
+
+
+def test_register_strategy_decorator_form():
+    @register_strategy("_decorated")
+    @dataclasses.dataclass(frozen=True)
+    class _DecoratedStrategy(FedAvgStrategy):
+        pass
+
+    try:
+        s = get_strategy("_decorated")
+        assert isinstance(s, _DecoratedStrategy)
+        assert s.name == "_decorated"
+    finally:
+        _REGISTRY.pop("_decorated")
+
+
+def test_get_strategy_passes_instances_through():
+    s = CWFLStrategy(name="adhoc")
+    assert get_strategy(s) is s
+
+
+# ---------------------------------------------------------------------------
+# Deprecated compatibility surface.
+# ---------------------------------------------------------------------------
+
+def test_deprecated_strategies_mapping_warns_and_works(topo):
+    from repro.training import STRATEGIES
+
+    with pytest.warns(DeprecationWarning, match="repro.strategies"):
+        setup_fn, aggregate_fn = STRATEGIES["cwfl"]
+    state = setup_fn(topo, jax.random.PRNGKey(0), num_clusters=3,
+                     snr_db=SNR_DB)
+    stacked = _stacked(jax.random.PRNGKey(1))
+    old = aggregate_fn(stacked, state, jax.random.PRNGKey(2))
+    new = get_strategy("cwfl").aggregate(stacked, state,
+                                         jax.random.PRNGKey(2))
+    assert _trees_bitwise_equal(old, new)
+    with pytest.warns(DeprecationWarning):
+        assert sorted(STRATEGIES) == available_strategies()
+
+
+def test_scenario_default_strategy_resolves_through_registry():
+    from repro.sim import Scenario, get_scenario
+    assert get_scenario("straggler-prox").default_strategy().name == "cwfl_prox"
+    assert Scenario().default_strategy().name == "cwfl"        # fallback
+    with pytest.raises(KeyError, match="unknown strategy"):
+        Scenario(name="bad", strategy="nope").default_strategy()
+
+
+def test_scenario_pin_override_warns():
+    """A scenario's pinned strategy can't silently lose to the config:
+    the engine warns when cfg.strategy overrides the pin."""
+    from goldens.generate import workload
+    from repro.sim import Scenario, run_rounds
+
+    init, apply, loss, topo, xs, ys, xte, yte = workload()
+    sc = Scenario(name="pinned", strategy="cwfl_prox")
+    cfg = FLConfig(strategy="cwfl", rounds=1, snr_db=40.0, eval_samples=64)
+    with pytest.warns(UserWarning, match="pins strategy"):
+        run_rounds(init, apply, loss, topo, xs, ys, xte, yte, cfg,
+                   scenario=sc)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: prox strategies through the engine registry path.
+# ---------------------------------------------------------------------------
+
+def test_cwfl_prox_end_to_end_differs_from_cwfl():
+    """`cwfl_prox` runs through run_rounds by NAME (registry path) and the
+    proximal local objective actually bites — the trajectory departs from
+    plain cwfl on the identical seed/key schedule."""
+    from goldens.generate import workload
+    from repro.sim import run_rounds
+
+    init, apply, loss, topo, xs, ys, xte, yte = workload()
+    # batch 16 ⇒ several local SGD steps per round — FedProx is exactly
+    # inert at the very first local step (θ = θ_g), so a 1-step round
+    # could not distinguish the variants
+    kw = dict(rounds=2, snr_db=40.0, eval_samples=256, seed=0,
+              batch_size=16)
+    h_prox = run_rounds(init, apply, loss, topo, xs, ys, xte, yte,
+                        FLConfig(strategy="cwfl_prox", **kw))
+    h_base = run_rounds(init, apply, loss, topo, xs, ys, xte, yte,
+                        FLConfig(strategy="cwfl", **kw))
+    prox_loss = np.asarray(h_prox["train_loss"])
+    assert np.isfinite(prox_loss).all()
+    assert not np.array_equal(prox_loss, np.asarray(h_base["train_loss"]))
