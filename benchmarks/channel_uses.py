@@ -1,9 +1,14 @@
 """Channel-use efficiency (the paper's headline claim §IV/VI): CWFL needs
 C(C−1) head-to-head uses + C intra-cluster OTA slots per round, vs K(K−1)
-for fully-decentralized consensus and 1 for a (single) server OTA MAC."""
+for fully-decentralized consensus and 1 for a (single) server OTA MAC.
+
+Counts come from `repro.obs.ledger.per_round_table` — the same
+`Strategy.channel_uses` arithmetic the in-scan telemetry ledger
+accumulates, so this table and a run's recorded ``cum_channel_uses`` are
+one source of truth."""
 from __future__ import annotations
 
-from repro.core.cwfl import channel_uses_per_round
+from repro.obs.ledger import per_round_table
 
 
 def run(clients=(12, 27, 50, 100), clusters=(2, 3, 4, 8)):
@@ -12,7 +17,7 @@ def run(clients=(12, 27, 50, 100), clusters=(2, 3, 4, 8)):
         for C in clusters:
             if C >= K:
                 continue
-            u = channel_uses_per_round(K, C)
+            u = per_round_table(K, C)
             rows.append({"K": K, "C": C, **u,
                          "saving_vs_decentralized":
                              u["decentralized"] / u["cwfl"]})

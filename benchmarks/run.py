@@ -36,6 +36,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks.common import BenchScale
+    from repro.obs.manifest import build_manifest
     scale = BenchScale.full() if args.full else BenchScale()
     if args.fast:
         scale = BenchScale(mnist_clients=10, cifar_clients=9,
@@ -69,6 +70,10 @@ def main() -> None:
         payload = {
             r["name"]: {k: v for k, v in r.items() if k != "name"}
             for r in krows}
+        # Provenance (repro.obs.manifest): BENCH numbers are attributable
+        # to a git sha / device / jax version run-to-run.
+        payload["run_manifest"] = build_manifest(
+            cfg=vars(args), extra={"bench": "kernels"})
         with open(args.bench_out, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.bench_out}", flush=True)
@@ -113,6 +118,8 @@ def main() -> None:
         for k, v in prev.items():
             if k.endswith("_guard") and k not in payload:
                 payload[k] = v      # persist one-off guard records
+        payload["run_manifest"] = build_manifest(
+            cfg=vars(args), extra={"bench": "sim"})
         with open(args.sim_out, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.sim_out}", flush=True)

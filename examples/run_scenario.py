@@ -4,6 +4,7 @@
     PYTHONPATH=src python examples/run_scenario.py --scenario snr-sweep --seeds 4
     PYTHONPATH=src python examples/run_scenario.py --seeds 8 --shard mc
     PYTHONPATH=src python examples/run_scenario.py --shard clients
+    PYTHONPATH=src python examples/run_scenario.py --telemetry run.jsonl
     PYTHONPATH=src python examples/run_scenario.py --list
 
 One seed runs a single scanned trajectory; ``--seeds N`` (N > 1) runs the
@@ -18,6 +19,13 @@ trajectory instead.  ``--devices N`` caps the mesh; ``--assert-match-vmap``
 re-runs the single-device vmap sweep and asserts the sharded metrics
 match it (bitwise for seeds-only sweeps; ulp-level for SNR grids — see
 DESIGN.md §Sharded-MC).
+
+``--telemetry OUT.jsonl`` turns on the in-scan `repro.obs` round
+telemetry (per-cluster loss, participation, consensus drift, the OTA
+channel-use ledger, strategy internals) and writes the run — manifest,
+per-round records, summary with phase wall timings — as a JSONL stream
+`examples/obs_report.py` renders to markdown.  ``--profile-dir DIR``
+additionally captures a TensorBoard-loadable ``jax.profiler`` trace.
 """
 from __future__ import annotations
 
@@ -58,12 +66,22 @@ def main() -> None:
     ap.add_argument("--assert-match-vmap", action="store_true",
                     help="with --shard mc: also run the single-device vmap "
                          "sweep and assert the metrics match")
+    ap.add_argument("--telemetry", default=None, metavar="OUT.jsonl",
+                    help="record in-scan round telemetry (repro.obs) and "
+                         "write the run as a JSONL stream — manifest, one "
+                         "record per (trajectory, round), summary with "
+                         "phase timings; render with examples/obs_report.py")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace into this directory "
+                         "(TensorBoard-loadable)")
     args = ap.parse_args()
 
     from repro.core import TopologyConfig, make_topology
     from repro.data import (SyntheticImageConfig, make_synthetic_images,
                             partition_iid)
     from repro.models import make_mnist_mlp, nll_loss
+    from repro.obs import (PhaseTimers, build_manifest, profiler_trace,
+                           write_history)
     from repro.sim import SCENARIOS, get_scenario, run_monte_carlo, run_rounds
     from repro.strategies import available_strategies, get_strategy
     from repro.training import FLConfig
@@ -109,17 +127,23 @@ def main() -> None:
         mesh = make(args.devices or None)
         print(f"shard={args.shard} mesh={dict(mesh.shape)}")
 
+    telemetry = args.telemetry is not None
+    timers = PhaseTimers() if telemetry else None
+
     print(f"scenario={args.scenario} strategy={strategy.name} "
-          f"K={args.clients} rounds={args.rounds} seeds={args.seeds}")
+          f"K={args.clients} rounds={args.rounds} seeds={args.seeds}"
+          + (f" telemetry={args.telemetry}" if telemetry else ""))
     t0 = time.perf_counter()
     if args.seeds > 1 or scenario.snr_grid:
         if args.shard == "clients":
             ap.error("--shard clients runs ONE trajectory (the K-client "
                      "axis is the parallel axis); drop --seeds / pick a "
                      "grid-free scenario, or use --shard mc for sweeps")
-        h = run_monte_carlo(init, apply, loss, topo, xs, ys, xte, yte, cfg,
-                            scenario=scenario, topo_cfg=tcfg,
-                            seeds=args.seeds, shard=args.shard, mesh=mesh)
+        with profiler_trace(args.profile_dir):
+            h = run_monte_carlo(init, apply, loss, topo, xs, ys, xte, yte,
+                                cfg, scenario=scenario, topo_cfg=tcfg,
+                                seeds=args.seeds, shard=args.shard,
+                                mesh=mesh, telemetry=telemetry, timers=timers)
         wall = time.perf_counter() - t0
         if args.assert_match_vmap and args.shard == "mc":
             h_ref = run_monte_carlo(init, apply, loss, topo, xs, ys, xte,
@@ -136,6 +160,10 @@ def main() -> None:
                 np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-5)
                 print(f"  sharded == vmap [{key}]: "
                       f"{'bitwise' if bit else 'allclose(2e-5)'} OK")
+        if timers is not None:
+            with timers.phase("gather"):
+                h["train_loss"] = np.asarray(h["train_loss"])
+                h["test_acc"] = np.asarray(h["test_acc"])
         acc = np.asarray(h["test_acc"])            # (S, T) or (S, G, T)
         n_traj = int(np.prod(acc.shape[:-1]))
         if h["snr_grid"] is not None:
@@ -161,10 +189,16 @@ def main() -> None:
             "trajectories": n_traj,
         }
     else:
-        h = run_rounds(init, apply, loss, topo, xs, ys, xte, yte, cfg,
-                       scenario=scenario, topo_cfg=tcfg,
-                       shard=args.shard, mesh=mesh)
+        with profiler_trace(args.profile_dir):
+            h = run_rounds(init, apply, loss, topo, xs, ys, xte, yte, cfg,
+                           scenario=scenario, topo_cfg=tcfg,
+                           shard=args.shard, mesh=mesh,
+                           telemetry=telemetry, timers=timers)
         wall = time.perf_counter() - t0
+        if timers is not None:
+            with timers.phase("gather"):
+                h["train_loss"] = np.asarray(h["train_loss"])
+                h["test_acc"] = np.asarray(h["test_acc"])
         acc = np.asarray(h["test_acc"])
         n_traj = 1
         for r, (l, a) in enumerate(zip(np.asarray(h["train_loss"]), acc)):
@@ -182,7 +216,23 @@ def main() -> None:
     total_rounds = n_traj * args.rounds
     print(f"  {total_rounds} rounds total in {wall:.1f}s "
           f"({total_rounds / wall:.2f} rounds/s incl. compile)")
+    manifest = None
+    if telemetry or args.out:
+        manifest = build_manifest(cfg=cfg, scenario=scenario,
+                                  strategy=strategy, mesh=mesh,
+                                  extra={"shard": args.shard,
+                                         "seeds": args.seeds,
+                                         "clients": args.clients})
+    if telemetry:
+        if timers is not None:
+            for name, secs in timers.as_dict().items():
+                print(f"  phase {name:14s} {secs:8.3f}s")
+        n_rec = write_history(args.telemetry, h, manifest=manifest,
+                              timings=timers.as_dict() if timers else None)
+        print(f"  wrote {args.telemetry} ({n_rec} records); render with "
+              f"examples/obs_report.py")
     if args.out:
+        payload["run_manifest"] = manifest
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"  wrote {args.out}")

@@ -402,9 +402,12 @@ def aggregate(stacked_params, state: CWFLState, key: jax.Array,
 
 def channel_uses_per_round(num_clients: int, num_clusters: int) -> dict:
     """Paper's efficiency claim: CWFL needs C(C−1) consensus channel uses +
-    1 OTA slot per cluster, vs K(K−1) for fully-decentralized FL."""
-    return {
-        "cwfl": num_clusters * (num_clusters - 1) + num_clusters,
-        "decentralized": num_clients * (num_clients - 1),
-        "server_ota": 1,
-    }
+    1 OTA slot per cluster, vs K(K−1) for fully-decentralized FL.
+
+    Thin forward to `repro.obs.ledger.per_round_table` — the counts live
+    on each registered strategy's ``Strategy.channel_uses`` so the
+    in-scan telemetry ledger, the benchmark tables, and this legacy entry
+    point can never disagree.  (Lazy import: core must not pay for — or
+    cycle into — the strategies/obs layers unless asked.)"""
+    from repro.obs.ledger import per_round_table
+    return per_round_table(num_clients, num_clusters)

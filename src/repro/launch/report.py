@@ -1,11 +1,17 @@
 """Generate EXPERIMENTS.md §Dry-run and §Roofline tables from the JSON
 results produced by repro.launch.dryrun / repro.launch.roofline.
 
-    PYTHONPATH=src python -m repro.launch.report
-prints markdown to stdout (paste/refresh into EXPERIMENTS.md).
+    PYTHONPATH=src python -m repro.launch.report \
+        [--dryrun-json PATH] [--roofline-json PATH]
+
+prints markdown to stdout (paste/refresh into EXPERIMENTS.md).  Paths
+default to the ``results/*.json`` layout the launch tools write, but are
+arguments — CI jobs and ad-hoc runs keep their results wherever they
+like.
 """
 from __future__ import annotations
 
+import argparse
 import json
 from pathlib import Path
 
@@ -69,11 +75,17 @@ def roofline_table(path="results/roofline.json") -> str:
     return "\n".join(out)
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dryrun-json", default="results/dryrun.json",
+                    help="dry-run results JSON (repro.launch.dryrun)")
+    ap.add_argument("--roofline-json", default="results/roofline.json",
+                    help="roofline results JSON (repro.launch.roofline)")
+    args = ap.parse_args(argv)
     print("## §Dry-run\n")
-    print(dryrun_table())
+    print(dryrun_table(args.dryrun_json))
     print("\n## §Roofline\n")
-    print(roofline_table())
+    print(roofline_table(args.roofline_json))
 
 
 if __name__ == "__main__":

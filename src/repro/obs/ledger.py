@@ -1,0 +1,65 @@
+"""Channel-use accounting — the ONE source of truth for the paper's
+communication-cost claim (§IV/§VI, DESIGN.md §Obs).
+
+The per-round MAC-slot count of each aggregation strategy lives on the
+`repro.strategies.Strategy` object itself (``Strategy.channel_uses`` —
+pure arithmetic, traced-friendly, so the in-scan telemetry ledger and the
+host-side benchmark tables can never disagree).  This module is the
+host-side front door:
+
+* :func:`uses_per_round` — resolve a strategy by name through the
+  registry and evaluate its per-round slot count with concrete ints;
+* :func:`per_round_table` — the paper's §IV comparison row (CWFL's
+  C(C−1)+C vs decentralized K(K−1) vs a single server MAC), consumed by
+  ``benchmarks/channel_uses.py`` and `examples/obs_report.py`;
+* :func:`symbols_per_round` — slots × d: the actual scalar symbol count
+  one sync of a d-dimensional model costs (each MAC slot carries one
+  d-dimensional OTA superposition).
+
+Accounting convention: one "channel use" is one scheduled MAC slot
+(an OTA superposition or one directed head→head/node→node transmission),
+exactly the unit of the paper's C(C−1)+C vs K(K−1) claim.  ``fedavg``
+counts 0 — it is the genie-aided noiseless bound with no wireless
+channel at all.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+def uses_per_round(strategy, num_clients: int,
+                   num_clusters: Optional[int] = None,
+                   participants=None):
+    """Per-round channel uses of ``strategy`` (a registry name or a
+    `Strategy` instance), delegated to ``Strategy.channel_uses``.
+
+    ``participants`` (optional, may be traced): effective participant
+    count after masking — only graph-based strategies whose slot count
+    depends on who shows up (decentralized: P(P−1)) read it.
+    """
+    from repro.strategies import get_strategy
+    return get_strategy(strategy).channel_uses(
+        num_clients, num_clusters=num_clusters, participants=participants)
+
+
+def symbols_per_round(strategy, dim: int, num_clients: int,
+                      num_clusters: Optional[int] = None,
+                      participants=None):
+    """Scalar symbols per sync round: slots × d (one d-dim vector per slot)."""
+    return uses_per_round(strategy, num_clients, num_clusters=num_clusters,
+                          participants=participants) * dim
+
+
+def per_round_table(num_clients: int, num_clusters: int) -> dict:
+    """The paper's §IV efficiency comparison for one (K, C) point:
+    CWFL's C(C−1) consensus uses + C OTA slots, vs K(K−1) for
+    fully-decentralized consensus, vs 1 for a single-server OTA MAC.
+    Every entry is evaluated from the registered strategy's own
+    ``channel_uses`` — `repro.core.cwfl.channel_uses_per_round` and
+    ``benchmarks/channel_uses.py`` both resolve through here.
+    """
+    return {
+        "cwfl": uses_per_round("cwfl", num_clients, num_clusters),
+        "decentralized": uses_per_round("decentralized", num_clients),
+        "server_ota": uses_per_round("cotaf", num_clients),
+    }

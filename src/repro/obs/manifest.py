@@ -1,0 +1,135 @@
+"""Run manifests: who/what/where provenance for every recorded run
+(DESIGN.md §Obs).
+
+BENCH_*.json and scenario result files used to record numbers with no
+provenance — no git sha, device kind, or jax version — making the perf
+trajectory unreproducible run-to-run.  :func:`build_manifest` stamps one
+canonical provenance record: git revision (+dirty flag), jax/numpy/python
+versions, backend and device kind/count, hostname, timestamps, the
+resolved scenario/strategy names, the full config and a stable
+``config_hash`` over (config, scenario, strategy) so runs with identical
+protocols are identifiable across files.
+
+Everything here is host-side stdlib + best-effort: a missing git binary
+or a non-repo checkout degrades to ``git: None`` rather than failing the
+run being recorded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import platform
+import socket
+import subprocess
+import time
+from typing import Any, Optional
+
+MANIFEST_SCHEMA = "repro.obs.manifest/v1"
+
+
+def to_jsonable(obj: Any) -> Any:
+    """Best-effort conversion to JSON-serializable structures: dataclasses
+    → dicts, numpy/jax arrays → lists (0-d → scalars), tuples → lists.
+    Unknown objects degrade to ``repr`` rather than raising — a manifest
+    must never kill the run it documents."""
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {f.name: to_jsonable(getattr(obj, f.name))
+                for f in dataclasses.fields(obj)}
+    if isinstance(obj, dict):
+        return {str(k): to_jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple, set)):
+        return [to_jsonable(v) for v in obj]
+    if hasattr(obj, "_asdict"):                      # NamedTuple
+        return to_jsonable(obj._asdict())
+    if hasattr(obj, "tolist"):                       # numpy / jax arrays
+        try:
+            return to_jsonable(obj.tolist())
+        except Exception:  # pragma: no cover - exotic array types
+            return repr(obj)
+    if hasattr(obj, "item"):                         # 0-d scalars
+        try:
+            return obj.item()
+        except Exception:  # pragma: no cover
+            return repr(obj)
+    return repr(obj)
+
+
+def config_hash(*objs: Any) -> str:
+    """Stable 16-hex digest of the canonical JSON of ``objs`` — the run
+    identity key: same (config, scenario, strategy) ⇒ same hash, across
+    processes and json key orderings."""
+    canon = json.dumps([to_jsonable(o) for o in objs], sort_keys=True,
+                       separators=(",", ":"))
+    return hashlib.sha256(canon.encode()).hexdigest()[:16]
+
+
+def git_revision(cwd: Optional[str] = None) -> Optional[dict]:
+    """``{"sha": <40-hex>, "dirty": bool}`` of the enclosing checkout, or
+    ``None`` when git/the repo is unavailable (never raises)."""
+    cwd = cwd or os.path.dirname(os.path.abspath(__file__))
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=cwd, capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], cwd=cwd, capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip() != ""
+        return {"sha": sha, "dirty": dirty}
+    except Exception:
+        return None
+
+
+def device_info() -> dict:
+    """Backend + device kind/count of the current jax runtime."""
+    import jax
+    devs = jax.devices()
+    return {
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind if devs else "unknown",
+        "device_count": len(devs),
+    }
+
+
+def build_manifest(cfg: Any = None, scenario: Any = None,
+                   strategy: Any = None, mesh: Any = None,
+                   extra: Optional[dict] = None) -> dict:
+    """One provenance record for a run.
+
+    ``cfg``: the `FLConfig` (or any dataclass/dict); ``scenario``: a
+    `Scenario` or its name; ``strategy``: a `Strategy` or its name;
+    ``mesh``: an optional jax `Mesh` (its axis→size shape is recorded);
+    ``extra``: free-form caller fields merged at the top level (bench
+    name, CLI argv, ...).
+    """
+    import jax
+    import numpy as np
+
+    scenario_name = getattr(scenario, "name", scenario)
+    strategy_name = getattr(strategy, "name", strategy)
+    cfg_json = to_jsonable(cfg)
+    man = {
+        "schema": MANIFEST_SCHEMA,
+        "created_unix": time.time(),
+        "created": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "git": git_revision(),
+        "jax_version": jax.__version__,
+        "numpy_version": np.__version__,
+        "python_version": platform.python_version(),
+        "platform": platform.platform(),
+        "hostname": socket.gethostname(),
+        **device_info(),
+        "strategy": strategy_name,
+        "scenario": scenario_name,
+        "config": cfg_json,
+        "config_hash": config_hash(cfg_json, to_jsonable(scenario),
+                                   strategy_name),
+    }
+    if mesh is not None:
+        man["mesh"] = {str(k): int(v) for k, v in dict(mesh.shape).items()}
+    if extra:
+        man.update(to_jsonable(extra))
+    return man

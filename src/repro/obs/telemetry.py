@@ -1,0 +1,118 @@
+"""In-scan round telemetry (DESIGN.md §Obs).
+
+The paper's claims are *trajectory* claims — O(1/T) convergence per
+cluster, communication cost vs decentralized FL — but the engine's scan
+only ever surfaced two scalars per round.  :class:`RoundTelemetry` is the
+per-round observation pytree the `repro.sim.engine` / `repro.sim.sharded`
+scan bodies emit when telemetry is enabled (a STATIC opt-in flag — the
+telemetry-off trajectory is byte-identical to the untelemetered jaxpr):
+
+* ``cluster_loss``      — per-aggregation-site mean client loss (a fresh
+  full-shard eval on the post-local-training params — deterministic, and
+  deliberately NOT the round's minibatch loss buffer, whose re-use would
+  re-fuse the round's own mean and shift train_loss by ulps): (C,) for
+  CWFL's clusters, (1,) global for server/decentralized strategies;
+* ``participants``      — effective transmit-side participation after
+  masking and forced-present rules (heads / the COTAF server);
+* ``consensus_drift``   — ‖θ_c − θ̄‖ per site: how far the per-cluster
+  (or per-node) models sit from the global consensus;
+* ``channel_uses`` / ``cum_channel_uses`` / ``cum_symbols`` — the OTA
+  channel-use ledger (`repro.obs.ledger`): MAC slots this round, the
+  running slot total, and the running scalar-symbol total (slots × d);
+* ``reclustered``       — 1.0 on rounds where the `lax.cond`-gated
+  re-clustering fired;
+* ``extras``            — strategy-specific internals from the
+  ``Strategy.telemetry`` hook (CWFL: eq. (5) precode scales, water-filled
+  P_k, per-channel-use transmit power vs the power budget, phase-1/2
+  receiver-noise stds and the expected injected-noise energy; COTAF: the
+  server index and its MAC equivalents; decentralized: graph occupancy).
+
+Everything is pure jnp computed from intermediates the round body already
+materializes (plus the one fresh loss eval above) — no extra RNG draws,
+no host syncs, and no second consumer on any fusion-sensitive buffer —
+so telemetry-on runs leave the ``train_loss``/``test_acc`` history
+bit-for-bit unchanged (pinned by ``tests/test_obs.py``).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class RoundTelemetry(NamedTuple):
+    """One round's observations.  A NamedTuple so it is automatically a
+    pytree — it rides the scan's per-round outputs and vmaps over
+    Monte-Carlo axes like any metric buffer."""
+
+    cluster_loss: Any       # (C,) or (1,) mean client loss per site
+    participants: Any       # () effective transmit-side count
+    consensus_drift: Any    # (C,) or (1,) ‖θ_site − θ̄‖
+    channel_uses: Any       # () MAC slots consumed this round
+    cum_channel_uses: Any   # () running slot ledger
+    cum_symbols: Any        # () running scalar-symbol ledger (slots × d)
+    reclustered: Any        # () {0,1} re-cluster event fired
+    extras: dict            # strategy-specific internals (scan-legal)
+
+
+def init_ledger() -> dict:
+    """Zeroed cumulative channel-use ledger for the scan carry."""
+    return {"uses": jnp.zeros((), jnp.float32),
+            "symbols": jnp.zeros((), jnp.float32)}
+
+
+def per_client_dim(stacked) -> int:
+    """d = dim(θ_k): scalars per client of a K-stacked pytree (static)."""
+    return sum(int(np.prod(x.shape[1:])) for x in jax.tree.leaves(stacked))
+
+
+def stacked_consensus_drift(stacked, consensus) -> jnp.ndarray:
+    """(R,) ℓ₂ distance of each leading-axis row of ``stacked`` from the
+    ``consensus`` pytree (one client/head/site per row)."""
+    rows = jax.tree.leaves(stacked)[0].shape[0]
+    sq = sum(
+        jnp.sum(jnp.square(
+            x.astype(jnp.float32).reshape(rows, -1)
+            - c.astype(jnp.float32).reshape(-1)[None, :]), axis=1)
+        for x, c in zip(jax.tree.leaves(stacked), jax.tree.leaves(consensus)))
+    return jnp.sqrt(sq)
+
+
+def build_round_telemetry(strategy, state, *, losses, stacked, new_stacked,
+                          consensus, mask, num_clients: int,
+                          num_clusters: int, ledger: dict,
+                          reclustered=None):
+    """Assemble one :class:`RoundTelemetry` from the round body's
+    intermediates plus the `Strategy.telemetry` hook, and advance the
+    cumulative channel-use ledger.
+
+    Returns ``(telemetry, new_ledger)``.  ``state`` is the round's
+    aggregation state (the per-round rebuild in dynamic scenarios, the
+    offline state on the static path); ``stacked`` is the post-local-
+    training / pre-sync parameter stack; ``reclustered`` is the
+    `lax.cond` predicate of the re-clustering gate (``None`` when the
+    scenario never reclusters).
+    """
+    t = strategy.telemetry(state, losses=losses, stacked=stacked,
+                           new_stacked=new_stacked, consensus=consensus,
+                           mask=mask)
+    uses = jnp.asarray(
+        strategy.channel_uses(num_clients, num_clusters=num_clusters,
+                              participants=t["participants"]), jnp.float32)
+    d = per_client_dim(stacked)
+    new_ledger = {"uses": ledger["uses"] + uses,
+                  "symbols": ledger["symbols"] + uses * d}
+    tele = RoundTelemetry(
+        cluster_loss=t["cluster_loss"],
+        participants=t["participants"],
+        consensus_drift=t["consensus_drift"],
+        channel_uses=uses,
+        cum_channel_uses=new_ledger["uses"],
+        cum_symbols=new_ledger["symbols"],
+        reclustered=(jnp.zeros((), jnp.float32) if reclustered is None
+                     else jnp.asarray(reclustered, jnp.float32)),
+        extras=t.get("extras", {}),
+    )
+    return tele, new_ledger

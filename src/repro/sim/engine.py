@@ -43,6 +43,7 @@ import numpy as np
 from repro.core import channel as ch
 from repro.core.topology import Topology, TopologyConfig
 from repro.models.small import accuracy as _accuracy
+from repro.obs.telemetry import build_round_telemetry, init_ledger
 from repro.optim import sgd
 from repro.sim.processes import (ChannelView, channel_view, csi_perturbation,
                                  init_channel, step_channel)
@@ -97,11 +98,19 @@ def _tree_where(mask: jnp.ndarray, a, b):
 def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
            topology: Topology, xs: jnp.ndarray, ys: jnp.ndarray,
            x_test: jnp.ndarray, y_test: jnp.ndarray, cfg: FLConfig,
-           scenario: Scenario, topo_cfg: Optional[TopologyConfig]):
+           scenario: Scenario, topo_cfg: Optional[TopologyConfig],
+           telemetry: bool = False):
     """Returns ``(prepare, body)``: ``prepare(seed, snr_db)`` builds the
     scan carry + per-round inputs, ``body`` is the round function.  Both
     are pure jnp — jit them together (scan mode, Monte-Carlo vmap) or
-    run `prepare` eagerly and jit `body` alone (legacy loop mode)."""
+    run `prepare` eagerly and jit `body` alone (legacy loop mode).
+
+    ``telemetry`` is a STATIC python flag: when False the carry, scan
+    outputs, and every traced op are exactly the untelemetered build —
+    the jaxpr is byte-identical, so the goldens replay bitwise.  When
+    True the carry grows a cumulative channel-use ledger (``"obs"``) and
+    ``body`` emits a third `RoundTelemetry` scan output assembled from
+    intermediates the round already computes (`repro.obs.telemetry`)."""
     strategy = get_strategy(cfg.strategy)
     if scenario.strategy is not None and scenario.strategy != strategy.name:
         # The scenario pins a preferred strategy (resolved by CLIs when no
@@ -142,6 +151,8 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
         round_keys = jax.random.split(k_rounds, cfg.rounds)
 
         carry = {"stacked": stacked, "opt": opt_state, "consensus": params0}
+        if telemetry:
+            carry["obs"] = init_ledger()
         scan_xs = {"rkey": round_keys}
         if not static:
             scan_xs["skey"] = jax.random.split(
@@ -174,7 +185,10 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
 
         def dynamic_sync(carry, stacked, inp, k_agg):
             """One scenario-aware sync: channel step → state rebuild →
-            masked aggregation.  Mutates ``carry`` (a per-round copy)."""
+            masked aggregation.  Mutates ``carry`` (a per-round copy).
+            Returns ``(new, consensus, state, mask, reclustered)`` — the
+            trailing three feed the telemetry hook and are plain Python
+            ``None``s (no extra traced ops) when unused."""
             t = inp["t"]
             k_chan, k_csi, k_mask, k_cluster = jax.random.split(
                 inp["skey"], 4)
@@ -200,13 +214,17 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
                        and scenario.channel.csi_error_std > 0) else None)
 
             plan = None
+            reclustered = None
             if strategy.reclusters and recluster > 0:
+                fire = (t % recluster) == 0
                 plan = jax.lax.cond(
-                    (t % recluster) == 0,
+                    fire,
                     lambda: strategy.recluster(view, cfg.num_clusters,
                                                k_cluster),
                     lambda: carry["plan"])
                 carry["plan"] = plan
+                if telemetry:
+                    reclustered = fire
 
             state = strategy.state_from_view(state0, view, nv, csi=csi,
                                              mask=mask, plan=plan)
@@ -229,23 +247,42 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
                 consensus = jax.tree.map(
                     lambda n, o: jnp.where(present, n, o),
                     consensus, carry["consensus"])
-            return new, consensus
+            return new, consensus, state, mask, reclustered
 
         def body(carry, inp):
             carry = dict(carry)
             k_local, k_agg = jax.random.split(inp["rkey"])
             client_keys = jax.random.split(k_local, K)
-            stacked, opt_state, losses = jax.vmap(local_run)(
+            trained, opt_state, losses = jax.vmap(local_run)(
                 carry["stacked"], carry["opt"], xs, ys, client_keys)
             if static:
-                stacked, consensus = strategy.aggregate(stacked, state0,
+                stacked, consensus = strategy.aggregate(trained, state0,
                                                         k_agg)
+                state, mask, reclustered = state0, None, None
             else:
-                stacked, consensus = dynamic_sync(carry, stacked, inp, k_agg)
+                stacked, consensus, state, mask, reclustered = dynamic_sync(
+                    carry, trained, inp, k_agg)
             logits = apply_fn(consensus, x_ev)
             acc = _accuracy(logits, y_ev)
             carry.update(stacked=stacked, opt=opt_state, consensus=consensus)
-            return carry, (jnp.mean(losses), acc)
+            if not telemetry:
+                return carry, (jnp.mean(losses), acc)
+            # Telemetry losses are a FRESH full-shard forward pass on the
+            # locally-trained params — NOT the minibatch `losses` above.
+            # Any reduction over `losses` other than the round's own
+            # jnp.mean (which CSEs with it) gives the buffer a second
+            # consumer, un-fuses the mean from the training loop, and
+            # perturbs the reported train_loss by ulps; `trained` is
+            # already materialized (it feeds the sync), so reading it is
+            # bit-neutral.  Full-batch per-client loss is also the better
+            # observable: deterministic, minibatch-noise-free.
+            tele_losses = jax.vmap(loss_fn)(trained, xs, ys)
+            tele, carry["obs"] = build_round_telemetry(
+                strategy, state, losses=tele_losses, stacked=trained,
+                new_stacked=stacked, consensus=consensus, mask=mask,
+                num_clients=K, num_clusters=cfg.num_clusters,
+                ledger=carry["obs"], reclustered=reclustered)
+            return carry, (jnp.mean(losses), acc, tele)
 
         return body
 
@@ -254,16 +291,18 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
 
 def make_trajectory_fn(prepare: Callable, make_body: Callable) -> Callable:
     """The per-trajectory closure: ``traj(seed, snr_db) -> (loss, acc)``,
-    both ``(T,)``.  This is the ONE traced body every Monte-Carlo executor
-    consumes — `run_monte_carlo`'s single-device ``vmap`` grid and the
-    device-parallel ``shard_map`` grid in :mod:`repro.sim.sharded` batch
-    the same function, so the two paths can only differ by how XLA
-    batches it (see the parity notes in DESIGN.md §Sharded-MC)."""
+    both ``(T,)`` — plus a round-stacked `RoundTelemetry` third element on
+    telemetry-enabled builds.  This is the ONE traced body every
+    Monte-Carlo executor consumes — `run_monte_carlo`'s single-device
+    ``vmap`` grid and the device-parallel ``shard_map`` grid in
+    :mod:`repro.sim.sharded` batch the same function, so the two paths can
+    only differ by how XLA batches it (see the parity notes in DESIGN.md
+    §Sharded-MC)."""
     def traj(seed, snr_db):
         ctx, carry0, scan_xs = prepare(seed, snr_db)
-        _, (loss, acc) = jax.lax.scan(make_body(ctx), carry0, scan_xs,
-                                      unroll=_SCAN_UNROLL)
-        return loss, acc
+        _, out = jax.lax.scan(make_body(ctx), carry0, scan_xs,
+                              unroll=_SCAN_UNROLL)
+        return out
     return traj
 
 
@@ -275,7 +314,9 @@ def run_rounds(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
                mode: str = "scan",
                progress: Optional[Callable] = None,
                shard: Optional[str] = None,
-               mesh=None) -> dict[str, Any]:
+               mesh=None,
+               telemetry: bool = False,
+               timers=None) -> dict[str, Any]:
     """Run one FL trajectory; returns history with on-device arrays.
 
     ``mode="scan"`` (default): the whole trajectory is one jit — no
@@ -287,6 +328,13 @@ def run_rounds(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
     ``("clients",)`` mesh (`repro.sim.sharded.run_rounds_client_sharded`
     — local training per rank, the per-cluster OTA sums riding a mesh
     collective); static CWFL scenarios only.
+    ``telemetry=True`` (static flag, `repro.obs`): record a per-round
+    `RoundTelemetry` under ``history["telemetry"]`` — with the flag off
+    the traced computation is byte-identical to pre-obs builds.
+    ``timers``: an optional `repro.obs.profiling.PhaseTimers` splitting
+    the run into ``trace_compile`` (AOT ``lower().compile()``) and
+    ``execute`` (to ``block_until_ready``) wall phases; ``None`` keeps
+    the default jit path untouched.
     """
     scenario = scenario or Scenario()
     if shard is not None:
@@ -303,9 +351,10 @@ def run_rounds(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
         from repro.sim import sharded
         return sharded.run_rounds_client_sharded(
             init_fn, apply_fn, loss_fn, topology, xs, ys, x_test, y_test,
-            cfg, scenario=scenario, mesh=mesh)
+            cfg, scenario=scenario, mesh=mesh, telemetry=telemetry)
     prepare, make_body = _build(init_fn, apply_fn, loss_fn, topology, xs, ys,
-                                x_test, y_test, cfg, scenario, topo_cfg)
+                                x_test, y_test, cfg, scenario, topo_cfg,
+                                telemetry=telemetry)
     T = cfg.rounds
 
     # `prepare` runs EAGERLY in both modes — the same eager/jit boundary the
@@ -315,27 +364,49 @@ def run_rounds(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
     ctx, carry, scan_xs = prepare(cfg.seed, cfg.snr_db)
     body = make_body(ctx)
 
+    tele = None
     if mode == "scan":
-        carry, (loss, acc) = jax.jit(
-            lambda c, x: jax.lax.scan(body, c, x, unroll=_SCAN_UNROLL))(
-                carry, scan_xs)
+        fn = jax.jit(
+            lambda c, x: jax.lax.scan(body, c, x, unroll=_SCAN_UNROLL))
+        if timers is not None:
+            with timers.phase("trace_compile"):
+                fn = fn.lower(carry, scan_xs).compile()
+            with timers.phase("execute"):
+                carry, out = jax.block_until_ready(fn(carry, scan_xs))
+        else:
+            carry, out = fn(carry, scan_xs)
+        if telemetry:
+            loss, acc, tele = out
+        else:
+            loss, acc = out
         consensus = carry["consensus"]
     elif mode == "loop":
         body_j = jax.jit(body)
-        loss_l, acc_l = [], []
+        loss_l, acc_l, tele_l = [], [], []
         for t in range(T):
             inp = jax.tree.map(lambda x: x[t], scan_xs)
-            carry, (l, a) = body_j(carry, inp)
+            if timers is not None:
+                with timers.phase("execute"):
+                    carry, out = jax.block_until_ready(body_j(carry, inp))
+            else:
+                carry, out = body_j(carry, inp)
+            if telemetry:
+                l, a, tl = out
+                tele_l.append(tl)
+            else:
+                l, a = out
             loss_l.append(l)
             acc_l.append(a)
             if progress is not None:
                 progress(t + 1, float(l), float(a))
         consensus = carry["consensus"]
         loss, acc = jnp.stack(loss_l), jnp.stack(acc_l)
+        if telemetry:
+            tele = jax.tree.map(lambda *x: jnp.stack(x), *tele_l)
     else:
         raise ValueError(f"mode must be 'scan' or 'loop', got {mode!r}")
 
-    return {
+    history = {
         "round": np.arange(1, T + 1),
         "train_loss": loss,
         "test_acc": acc,
@@ -343,6 +414,9 @@ def run_rounds(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
         "avg_acc": jnp.mean(acc),
         "final_acc": acc[-1],
     }
+    if telemetry:
+        history["telemetry"] = tele
+    return history
 
 
 def run_monte_carlo(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
@@ -353,7 +427,9 @@ def run_monte_carlo(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
                     seeds: int = 8,
                     snr_grid=None,
                     shard: Optional[str] = None,
-                    mesh=None) -> dict[str, Any]:
+                    mesh=None,
+                    telemetry: bool = False,
+                    timers=None) -> dict[str, Any]:
     """Monte-Carlo grid: ``seeds`` × ``snr_grid`` full trajectories in ONE
     jit (vmap over the seed axis, vmap over the scenario-scalar axis,
     `lax.scan` over rounds inside).
@@ -364,16 +440,30 @@ def run_monte_carlo(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
     over the device mesh via ``shard_map`` (`repro.sim.sharded`) instead
     of batching it all onto one device; the metrics are identical (see
     the parity contract pinned by ``tests/test_sim_sharded.py``).
-    Returns ``train_loss``/``test_acc`` of shape (S, T) or (S, G, T).
+    Returns ``train_loss``/``test_acc`` of shape (S, T) or (S, G, T);
+    with ``telemetry=True`` a trajectory-batched `RoundTelemetry` rides
+    under ``history["telemetry"]`` (leading axes (S,[G,]T)).  ``timers``:
+    optional `PhaseTimers` — see `run_rounds`.
     """
     scenario = scenario or Scenario()
     if snr_grid is None and scenario.snr_grid:
         snr_grid = scenario.snr_grid
     prepare, make_body = _build(init_fn, apply_fn, loss_fn, topology, xs, ys,
-                                x_test, y_test, cfg, scenario, topo_cfg)
+                                x_test, y_test, cfg, scenario, topo_cfg,
+                                telemetry=telemetry)
     traj = make_trajectory_fn(prepare, make_body)
 
+    def _run(fn, *a):
+        fn = jax.jit(fn)
+        if timers is None:
+            return fn(*a)
+        with timers.phase("trace_compile"):
+            fn = fn.lower(*a).compile()
+        with timers.phase("execute"):
+            return jax.block_until_ready(fn(*a))
+
     seed_arr = jnp.asarray(cfg.seed + np.arange(seeds))
+    tele = None
     if shard is not None:
         if shard != "mc":
             raise ValueError(
@@ -381,21 +471,35 @@ def run_monte_carlo(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
                 f"(shard='mc'); got {shard!r} — client-axis sharding "
                 "(shard='clients') lives in run_rounds")
         from repro.sim import sharded
-        loss, acc, grid = sharded.monte_carlo_sharded(
-            traj, seed_arr, snr_grid, cfg.snr_db, cfg.rounds, mesh=mesh)
+        out = sharded.monte_carlo_sharded(
+            traj, seed_arr, snr_grid, cfg.snr_db, cfg.rounds, mesh=mesh,
+            telemetry=telemetry)
+        if telemetry:
+            loss, acc, grid, tele = out
+        else:
+            loss, acc, grid = out
     elif snr_grid is None:
-        loss, acc = jax.jit(jax.vmap(traj, in_axes=(0, None)))(
-            seed_arr, cfg.snr_db)
+        out = _run(jax.vmap(traj, in_axes=(0, None)), seed_arr, cfg.snr_db)
         grid = None
+        if telemetry:
+            loss, acc, tele = out
+        else:
+            loss, acc = out
     else:
         grid = jnp.asarray(snr_grid, jnp.float32)
-        loss, acc = jax.jit(
-            jax.vmap(jax.vmap(traj, in_axes=(None, 0)),
-                     in_axes=(0, None)))(seed_arr, grid)
-    return {
+        out = _run(jax.vmap(jax.vmap(traj, in_axes=(None, 0)),
+                            in_axes=(0, None)), seed_arr, grid)
+        if telemetry:
+            loss, acc, tele = out
+        else:
+            loss, acc = out
+    history = {
         "train_loss": loss,
         "test_acc": acc,
         "final_acc": acc[..., -1],
         "seeds": seed_arr,
         "snr_grid": grid,
     }
+    if telemetry:
+        history["telemetry"] = tele
+    return history

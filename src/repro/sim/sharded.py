@@ -45,6 +45,7 @@ from repro.dist import shard_map
 from repro.dist.sharding_rules import client_specs, trajectory_specs
 from repro.launch.mesh import make_client_mesh, make_mc_mesh
 from repro.models.small import accuracy as _accuracy
+from repro.obs.telemetry import RoundTelemetry, init_ledger, per_client_dim
 from repro.sim.engine import _SCAN_UNROLL, make_round_local_runner
 from repro.sim.scenarios import Scenario
 from repro.strategies import get_strategy
@@ -66,14 +67,19 @@ def _pad_to(x: jnp.ndarray, n: int) -> jnp.ndarray:
 
 
 def make_sharded_sweep_fn(traj, n_pad: int, rounds: int, mesh,
-                          snr_db=None, with_grid: bool = False):
+                          snr_db=None, with_grid: bool = False,
+                          telemetry: bool = False):
     """Build the jitted ``shard_map`` sweep over ``n_pad`` flattened
     trajectories (``n_pad`` must divide over the ``mc`` axis).
 
     Returns ``f(seed_flat[, snr_flat]) -> (loss, acc)`` of shape
-    ``(n_pad, rounds)`` each.  Build ONCE and reuse — every call to this
-    factory traces and compiles afresh (the bench measures steady-state
-    throughput on the returned callable).
+    ``(n_pad, rounds)`` each — plus the trajectory-batched
+    `RoundTelemetry` when ``telemetry`` (a telemetry-enabled ``traj``
+    returns a third element; its out-specs are derived from the traced
+    output shapes via ``eval_shape``, leading trajectory dim over
+    ``mc``).  Build ONCE and reuse — every call to this factory traces
+    and compiles afresh (the bench measures steady-state throughput on
+    the returned callable).
     """
     in_spec = trajectory_specs(
         jax.ShapeDtypeStruct((n_pad,), jnp.int32), mesh)
@@ -85,26 +91,39 @@ def make_sharded_sweep_fn(traj, n_pad: int, rounds: int, mesh,
     # replication rule.
     if with_grid:
         body = lambda s, g: jax.vmap(traj)(s, g)
-        return jax.jit(shard_map(
-            body, mesh=mesh, in_specs=(in_spec, in_spec),
-            out_specs=(out_spec, out_spec), check_rep=False))
-    # snr_db may be a plain float or None — keep it a closure constant
-    # exactly like the vmap path's in_axes=(0, None).
-    body = lambda s: jax.vmap(lambda z: traj(z, snr_db))(s)
+        in_specs: tuple = (in_spec, in_spec)
+        eval_args = (jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+                     jax.ShapeDtypeStruct((n_pad,), jnp.float32))
+    else:
+        # snr_db may be a plain float or None — keep it a closure constant
+        # exactly like the vmap path's in_axes=(0, None).
+        body = lambda s: jax.vmap(lambda z: traj(z, snr_db))(s)
+        in_specs = (in_spec,)
+        eval_args = (jax.ShapeDtypeStruct((n_pad,), jnp.int32),)
+    if telemetry:
+        # Fit specs from the real (loss, acc, telemetry) output pytree —
+        # only on the telemetry path, so the untelemetered sweep keeps
+        # its hand-built specs (and jaxpr) untouched.
+        out_specs = trajectory_specs(jax.eval_shape(body, *eval_args), mesh)
+    else:
+        out_specs = (out_spec, out_spec)
     return jax.jit(shard_map(
-        body, mesh=mesh, in_specs=(in_spec,),
-        out_specs=(out_spec, out_spec), check_rep=False))
+        body, mesh=mesh, in_specs=in_specs,
+        out_specs=out_specs, check_rep=False))
 
 
 def monte_carlo_sharded(traj, seeds: jnp.ndarray, snr_grid, snr_db,
-                        rounds: int, mesh=None):
+                        rounds: int, mesh=None, telemetry: bool = False):
     """Run the flattened seeds × SNR grid under ``shard_map`` on the ``mc``
     mesh axis.
 
     ``traj`` is the engine's shared per-trajectory closure
     (`engine.make_trajectory_fn`).  Returns ``(loss, acc, grid)`` with the
     same shapes/dtypes as the vmap path: (S, T) when ``snr_grid`` is
-    empty, else (S, G, T) in seed-major grid order.
+    empty, else (S, G, T) in seed-major grid order.  With ``telemetry``
+    (``traj`` must be a telemetry-enabled build) the return grows a
+    fourth element — the `RoundTelemetry` pytree with (S,[G,]T) leading
+    axes, unpadded and grid-reshaped exactly like the metric buffers.
     """
     if mesh is None:
         mesh = make_mc_mesh()
@@ -133,16 +152,25 @@ def monte_carlo_sharded(traj, seeds: jnp.ndarray, snr_grid, snr_db,
     seed_flat = _pad_to(seed_flat, n_pad)
 
     f = make_sharded_sweep_fn(traj, n_pad, rounds, mesh, snr_db=snr_db,
-                              with_grid=snr_flat is not None)
-    if snr_flat is None:
-        loss, acc = f(seed_flat)
+                              with_grid=snr_flat is not None,
+                              telemetry=telemetry)
+    args = ((seed_flat,) if snr_flat is None
+            else (seed_flat, _pad_to(snr_flat, n_pad)))
+    if telemetry:
+        loss, acc, tele = f(*args)
+        tele = jax.tree.map(lambda x: x[:n], tele)
     else:
-        loss, acc = f(seed_flat, _pad_to(snr_flat, n_pad))
+        loss, acc = f(*args)
 
     loss, acc = loss[:n], acc[:n]
     if grid is not None:
         loss = loss.reshape(S, G, rounds)
         acc = acc.reshape(S, G, rounds)
+        if telemetry:
+            tele = jax.tree.map(
+                lambda x: x.reshape((S, G) + x.shape[1:]), tele)
+    if telemetry:
+        return loss, acc, grid, tele
     return loss, acc, grid
 
 
@@ -150,7 +178,15 @@ def monte_carlo_sharded(traj, seeds: jnp.ndarray, snr_grid, snr_db,
 # Client-parallel single trajectory (shard="clients").
 # ---------------------------------------------------------------------------
 
-def _client_sharded_sync(stacked_local, state, key: jax.Array, axis: str):
+# Extras keys `_client_sharded_sync(with_telemetry=True)` reports (minus
+# ``consensus_drift``, which feeds the RoundTelemetry field directly) —
+# the shard_map out-spec layout for the telemetry pytree.
+_CLIENT_TELE_EXTRAS = ("client_power", "noise_energy", "phase1_noise_std",
+                       "phase2_noise_std", "power_budget_frac",
+                       "precode_scale", "tx_power")
+
+def _client_sharded_sync(stacked_local, state, key: jax.Array, axis: str,
+                         with_telemetry: bool = False):
     """One CWFL sync with the K clients split over ``axis``.
 
     The K'-clients-per-rank generalization of
@@ -162,6 +198,11 @@ def _client_sharded_sync(stacked_local, state, key: jax.Array, axis: str):
     shared keys, so every rank sees the identical channel realization and
     the only divergence from the unsharded flat path is the ``psum``'s
     cross-rank re-association (ulp-level; DESIGN.md §Sharded-MC).
+
+    ``with_telemetry`` additionally returns the sync's internals as a
+    third element — the same extras dict keys `CWFLStrategy.telemetry`
+    reports on the unsharded path, plus ``consensus_drift`` (per-head
+    ‖θ̄_c − θ̄‖, already replicated across ranks by the psum).
     """
     leaves, treedef = jax.tree.flatten(stacked_local)
     kl = leaves[0].shape[0]
@@ -194,7 +235,25 @@ def _client_sharded_sync(stacked_local, state, key: jax.Array, axis: str):
     m_loc = jax.lax.dynamic_slice_in_dim(m_back, r * kl, kl, axis=0)
     new_flat = m_loc @ theta_bar                                  # (K', d)
     cons_flat = jnp.mean(theta_bar, axis=0)                       # (d,)
-    return cwfl._flat_unpack(new_flat, cons_flat, leaves, treedef, kl)
+    new, cons = cwfl._flat_unpack(new_flat, cons_flat, leaves, treedef, kl)
+    if not with_telemetry:
+        return new, cons
+    pre = cwfl.precode_scale(state, mean_sq)
+    member = 1.0 - state.plan.head_mask
+    tx_power = (member * (state.client_power / state.total_power)
+                * pre**2 * mean_sq)
+    extras = {
+        "consensus_drift": jnp.sqrt(jnp.sum(
+            jnp.square(theta_bar - cons_flat[None, :]), axis=1)),
+        "precode_scale": pre,
+        "client_power": state.client_power,
+        "tx_power": tx_power,
+        "power_budget_frac": jnp.sum(tx_power) / state.total_power,
+        "phase1_noise_std": eff_std1,
+        "phase2_noise_std": kappa,
+        "noise_energy": d * (jnp.sum(eff_std1**2) + jnp.sum(kappa**2)),
+    }
+    return new, cons, extras
 
 
 def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
@@ -202,7 +261,8 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
                               x_test: jnp.ndarray, y_test: jnp.ndarray,
                               cfg: FLConfig,
                               scenario: Optional[Scenario] = None,
-                              mesh=None) -> dict[str, Any]:
+                              mesh=None,
+                              telemetry: bool = False) -> dict[str, Any]:
     """One trajectory with the stacked K-client axis sharded over a
     ``("clients",)`` mesh: per-rank local training (vmap over K/n local
     clients) + the `psum`-riding CWFL sync, scanned over rounds.
@@ -213,6 +273,12 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
     The carry and key schedule come from `engine._build`'s own eager
     ``prepare`` (not a copy), so they track the unsharded path by
     construction; metrics agree to psum-reassociation tolerance.
+
+    ``telemetry=True`` (static flag) emits ``history["telemetry"]`` with
+    the same `RoundTelemetry` fields as the unsharded engine: per-cluster
+    losses ride one extra tiny ``psum`` (membership-sliced (C, K') @
+    local losses), everything else falls out of the sync's own
+    replicated internals (`_client_sharded_sync`'s extras).
     """
     from repro.sim.engine import _build
 
@@ -255,22 +321,64 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
     x_ev = x_test[: cfg.eval_samples]
     y_ev = y_test[: cfg.eval_samples]
 
+    membership = state0.plan.membership                  # (C, K), static
+    counts = jnp.maximum(membership.sum(axis=1), 1.0)
+    uses = jnp.asarray(
+        strategy.channel_uses(K, num_clusters=cfg.num_clusters),
+        jnp.float32)
+
     def traj(stacked0, opt0, cons0, xs_l, ys_l, rkeys):
         r = jax.lax.axis_index("clients")
 
         def body(carry, rkey):
-            st, opt, _ = carry
+            if telemetry:
+                st, opt, _, ledger = carry
+            else:
+                st, opt, _ = carry
             k_local, k_agg = jax.random.split(rkey)
             client_keys = jax.random.split(k_local, K)   # global schedule
             ck = jax.lax.dynamic_slice_in_dim(client_keys, r * kl, kl)
             st, opt, losses = jax.vmap(local_run)(st, opt, xs_l, ys_l, ck)
-            new, consensus = _client_sharded_sync(st, state0, k_agg,
-                                                  "clients")
+            if telemetry:
+                new, consensus, extras = _client_sharded_sync(
+                    st, state0, k_agg, "clients", with_telemetry=True)
+            else:
+                new, consensus = _client_sharded_sync(st, state0, k_agg,
+                                                      "clients")
             loss = jax.lax.psum(jnp.sum(losses), "clients") / K
             logits = apply_fn(consensus, x_ev)
             acc = _accuracy(logits, y_ev)
-            return (new, opt, consensus), (loss, acc)
+            if not telemetry:
+                return (new, opt, consensus), (loss, acc)
+            mem_loc = jax.lax.dynamic_slice_in_dim(membership, r * kl, kl,
+                                                   axis=1)     # (C, K')
+            # Fresh full-shard losses for telemetry — reading the
+            # minibatch `losses` again would re-fuse its psum-mean and
+            # perturb the reported train_loss by ulps (same contract as
+            # the unsharded engine body).
+            tele_losses = jax.vmap(loss_fn)(st, xs_l, ys_l)
+            cluster_loss = jax.lax.psum(mem_loc @ tele_losses,
+                                        "clients") / counts
+            d = per_client_dim(st)
+            new_ledger = {"uses": ledger["uses"] + uses,
+                          "symbols": ledger["symbols"] + uses * d}
+            tele = RoundTelemetry(
+                cluster_loss=cluster_loss,
+                participants=jnp.asarray(K, jnp.float32),
+                consensus_drift=extras.pop("consensus_drift"),
+                channel_uses=uses,
+                cum_channel_uses=new_ledger["uses"],
+                cum_symbols=new_ledger["symbols"],
+                reclustered=jnp.zeros((), jnp.float32),
+                extras=extras)
+            return (new, opt, consensus, new_ledger), (loss, acc, tele)
 
+        if telemetry:
+            (_, _, final, _), out = jax.lax.scan(
+                body, (stacked0, opt0, cons0, init_ledger()), rkeys,
+                unroll=_SCAN_UNROLL)
+            loss, acc, tele = out
+            return loss, acc, final, tele
         (_, _, final), (loss, acc) = jax.lax.scan(
             body, (stacked0, opt0, cons0), rkeys, unroll=_SCAN_UNROLL)
         return loss, acc, final
@@ -280,16 +388,29 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
     k_spec = lambda tree: client_specs(jax.eval_shape(lambda t: t, tree),
                                        mesh)
     rep = lambda tree: jax.tree.map(lambda _: P(), tree)
+    out_specs: tuple = (P(), P(), rep(params0))
+    if telemetry:
+        # Every telemetry value is psum-replicated or a rank-constant —
+        # all-P() specs, keyed off the known extras layout.
+        tele_spec = RoundTelemetry(
+            cluster_loss=P(), participants=P(), consensus_drift=P(),
+            channel_uses=P(), cum_channel_uses=P(), cum_symbols=P(),
+            reclustered=P(),
+            extras={k: P() for k in _CLIENT_TELE_EXTRAS})
+        out_specs = out_specs + (tele_spec,)
     f = shard_map(
         traj, mesh=mesh,
         in_specs=(k_spec(stacked), k_spec(opt_state), rep(params0),
                   P("clients"), P("clients"), P()),
-        out_specs=(P(), P(), rep(params0)),
+        out_specs=out_specs,
         check_rep=False)   # scan+psum bodies defeat the rep checker
-    loss, acc, consensus = jax.jit(f)(stacked, opt_state, params0, xs, ys,
-                                      round_keys)
+    out = jax.jit(f)(stacked, opt_state, params0, xs, ys, round_keys)
+    if telemetry:
+        loss, acc, consensus, tele = out
+    else:
+        loss, acc, consensus = out
 
-    return {
+    history = {
         "round": np.arange(1, T + 1),
         "train_loss": loss,
         "test_acc": acc,
@@ -297,3 +418,6 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
         "avg_acc": jnp.mean(acc),
         "final_acc": acc[-1],
     }
+    if telemetry:
+        history["telemetry"] = tele
+    return history

@@ -20,7 +20,11 @@ the whole per-strategy surface —
   absences, e.g. decentralized's pruned Metropolis graph);
 * capability flags (``supports_client_sharding``, ``needs_graph``,
   ``water_fills``, ``reclusters``) that gate the sharded/simulated
-  execution paths instead of name string checks.
+  execution paths instead of name string checks;
+* observability hooks (``channel_uses``, ``telemetry``) — the per-round
+  channel-use count and the strategy-internal telemetry pytree the
+  `repro.obs` subsystem records when the engine runs with telemetry
+  enabled (DESIGN.md §Obs).
 
 ``register_strategy(name)`` adds a strategy to the registry every
 front door resolves through: ``FLConfig.strategy``, ``Scenario.strategy``
@@ -128,6 +132,54 @@ class Strategy:
         when :attr:`reclusters`; `lax.cond`-gated inside the scan)."""
         raise NotImplementedError(
             f"{type(self).__name__} has no cluster plan to rebuild")
+
+    # -- observability hooks (repro.obs, DESIGN.md §Obs) --------------------
+    def channel_uses(self, num_clients: int,
+                     num_clusters: Optional[int] = None,
+                     participants=None):
+        """OTA channel uses (MAC slots) one sync round consumes — the
+        quantity `repro.obs.ledger` accumulates and the paper's Fig. 4
+        communication-cost axis counts.  ``participants`` may be a traced
+        scalar (masked rounds); the default is an orchestrator-free genie
+        (FedAvg): zero uses.
+        """
+        return 0
+
+    def telemetry(self, state: State, *, losses, stacked, new_stacked,
+                  consensus, mask=None) -> dict:
+        """Strategy-internal round telemetry (pure jnp, scan/vmap-legal):
+        ``{"cluster_loss": (C',), "participants": scalar,
+        "consensus_drift": (C',), "extras": {str: array}}`` — shapes fixed
+        across rounds so the pytree rides `lax.scan`.  The default reports
+        a single global "cluster": mean loss, mask-summed participation,
+        mean model drift ‖θ_k − θ̄‖.  Strategies with real aggregation
+        internals (CWFL's precoding scales and injected-noise energy,
+        COTAF's server, decentralized's active links) override and extend
+        ``extras``.
+
+        ``losses`` is the engine's (K,) per-client TELEMETRY loss — a
+        full-shard eval on the post-local-training params, freshly
+        computed for the observation plane (the engine must not hand the
+        hook its minibatch loss buffer: an extra reduction over it
+        changes XLA's fusion of the round's own mean and perturbs the
+        reported train_loss by ulps — see `repro.sim.engine`).
+        ``stacked``/``new_stacked`` are the pre-/post-sync parameter
+        stacks; ``consensus`` the post-sync global model.
+        """
+        import jax.numpy as jnp
+
+        from repro.obs.telemetry import stacked_consensus_drift
+
+        num_clients = losses.shape[0]
+        participants = (jnp.asarray(num_clients, jnp.float32) if mask is None
+                        else jnp.sum(mask).astype(jnp.float32))
+        drift = jnp.mean(stacked_consensus_drift(new_stacked, consensus))
+        return {
+            "cluster_loss": jnp.mean(losses)[None],
+            "participants": participants,
+            "consensus_drift": drift[None],
+            "extras": {},
+        }
 
     def effective_mu_prox(self, cfg_mu: float) -> float:
         """FedProx µ_p for the local runner: an explicit per-run

@@ -18,6 +18,8 @@ from __future__ import annotations
 import dataclasses
 from typing import ClassVar, Optional
 
+import jax.numpy as jnp
+
 from repro.core import baselines, clustering as cl, cwfl
 from repro.strategies.base import Strategy, register_strategy
 
@@ -65,6 +67,58 @@ class CWFLStrategy(Strategy):
         return cl.make_cluster_plan(view.link_snr, view.adjacency,
                                     num_clusters, key)
 
+    def channel_uses(self, num_clients, num_clusters=None,
+                     participants=None):
+        # Paper §IV: C OTA intra-cluster slots + C(C−1) directed
+        # head→head consensus uses; independent of who shows up (heads
+        # are forced present, absent members just thin the superposition).
+        del num_clients, participants
+        C = num_clusters
+        return C * (C - 1) + C
+
+    def telemetry(self, state, *, losses, stacked, new_stacked, consensus,
+                  mask=None):
+        from repro.obs.telemetry import per_client_dim, \
+            stacked_consensus_drift
+
+        plan = state.plan
+        counts = jnp.maximum(plan.membership.sum(axis=1), 1.0)
+        part = cwfl.participation_weights(state, mask)
+        participants = (jnp.asarray(state.num_clients, jnp.float32)
+                        if part is None else jnp.sum(part))
+
+        # The exact coefficients this round transmitted with — the eq. (5)
+        # precode scales and the phase-1/2 equivalent receiver-noise stds.
+        mean_sq = cwfl.per_client_mean_sq(stacked)
+        _, eff_std1, _, kappa, _ = cwfl.round_coefficients(
+            state, stacked, mask=mask, mean_sq=mean_sq)
+        pre = cwfl.precode_scale(state, mean_sq)
+        # Per-channel-use power each *member* actually puts on the MAC:
+        # amplitude² = (p_k · pre_k)² per unit-power symbol, × E‖θ‖²/d.
+        # Heads never cross the channel (virtual clients).
+        member = 1.0 - plan.head_mask
+        amp2 = (state.client_power / state.total_power) * pre**2
+        tx_power = member * amp2 * mean_sq
+        if part is not None:
+            tx_power = tx_power * part
+        d = per_client_dim(stacked)
+        return {
+            "cluster_loss": (plan.membership @ losses) / counts,
+            "participants": participants,
+            "consensus_drift": stacked_consensus_drift(
+                new_stacked, consensus)[plan.heads],
+            "extras": {
+                "precode_scale": pre,
+                "client_power": state.client_power,
+                "tx_power": tx_power,
+                "power_budget_frac": jnp.sum(tx_power) / state.total_power,
+                "phase1_noise_std": eff_std1,
+                "phase2_noise_std": kappa,
+                "noise_energy": d * (jnp.sum(eff_std1**2)
+                                     + jnp.sum(kappa**2)),
+            },
+        }
+
 
 @dataclasses.dataclass(frozen=True)
 class COTAFStrategy(Strategy):
@@ -89,6 +143,29 @@ class COTAFStrategy(Strategy):
         # Same receiver rule as CWFL heads: the server holds the
         # aggregate, so it keeps it.
         return baselines.cotaf_participation(state, mask)
+
+    def channel_uses(self, num_clients, num_clusters=None,
+                     participants=None):
+        # One shared OTA MAC to the server, however many transmit on it.
+        del num_clients, num_clusters, participants
+        return 1
+
+    def telemetry(self, state, *, losses, stacked, new_stacked, consensus,
+                  mask=None):
+        t = super().telemetry(state, losses=losses, stacked=stacked,
+                              new_stacked=new_stacked, consensus=consensus,
+                              mask=mask)
+        part = baselines.cotaf_participation(state, mask)
+        if part is not None:
+            t["participants"] = jnp.sum(part)
+        t["extras"] = {
+            "server": (jnp.asarray(-1.0, jnp.float32) if state.server is None
+                       else state.server.astype(jnp.float32)),
+            "client_power": state.client_power,
+            "mac_noise_std": (state.noise_std
+                              / jnp.sqrt(state.total_power)),
+        }
+        return t
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +216,29 @@ class DecentralizedStrategy(Strategy):
         # The mixing matrix already encodes absences — no receive-side
         # fold (and no sync-skip guard) on top.
         return None
+
+    def channel_uses(self, num_clients, num_clusters=None,
+                     participants=None):
+        # Eq. 3's full-gossip cost: every participating node transmits to
+        # every other — P(P−1) directed uses (K(K−1) when unmasked).
+        del num_clusters
+        p = num_clients if participants is None else participants
+        return p * (p - 1)
+
+    def telemetry(self, state, *, losses, stacked, new_stacked, consensus,
+                  mask=None):
+        t = super().telemetry(state, losses=losses, stacked=stacked,
+                              new_stacked=new_stacked, consensus=consensus,
+                              mask=mask)
+        W = state.mixing
+        off = W * (1.0 - jnp.eye(W.shape[0]))
+        t["extras"] = {
+            "active_links": jnp.sum(off > 0).astype(jnp.float32),
+            "mean_self_weight": jnp.mean(jnp.diag(W)),
+            "receive_noise_std": jnp.sqrt(jnp.sum(off**2, axis=1)) * (
+                state.noise_std / jnp.sqrt(state.total_power)),
+        }
+        return t
 
 
 # Paper §V's FedProx coefficient for the *-Prox curves.

@@ -9,7 +9,10 @@ entry is automatically held to the same contract:
 * the masked receive rule keeps forced-present nodes (CWFL heads, the
   COTAF server) and never drops a participant;
 * ``state_from_view`` + ``aggregate`` are jit/vmap-legal inside a
-  2-round ``lax.scan`` (the engine's execution shape).
+  2-round ``lax.scan`` (the engine's execution shape);
+* the observability hooks conform (repro.obs): ``telemetry`` returns the
+  required keys with finite, fixed-shape leaves and traces under
+  jit ∘ vmap ∘ scan; ``channel_uses`` matches the paper's §IV arithmetic.
 
 CI runs this module with ``-W error::DeprecationWarning`` scoped to
 ``repro.*`` — the library itself must not lean on its own deprecated
@@ -182,6 +185,67 @@ def test_state_from_view_scan_vmap_legal(topo, name):
     sums = jax.jit(jax.vmap(traj))(jnp.arange(2))
     assert sums.shape == (2, 2)
     assert bool(jnp.isfinite(sums).all())
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_telemetry_hook_conformance(topo, name):
+    """Observability contract (repro.obs): every strategy's telemetry
+    pytree has the required keys, fixed shapes, finite float leaves — and
+    stays legal under jit ∘ vmap ∘ 2-round lax.scan, the exact shape the
+    engine records it in."""
+    s = get_strategy(name)
+    state = s.init(topo, jax.random.PRNGKey(0), _cfg(name), snr_db=SNR_DB)
+    losses = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (K,)))
+    stacked = _stacked(jax.random.PRNGKey(1))
+    new, consensus = s.aggregate(stacked, state, jax.random.PRNGKey(2))
+
+    for mask in (None, jnp.ones((K,), jnp.float32)):
+        t = s.telemetry(state, losses=losses, stacked=stacked,
+                        new_stacked=new, consensus=consensus, mask=mask)
+        assert set(t) == {"cluster_loss", "participants",
+                          "consensus_drift", "extras"}
+        assert t["cluster_loss"].ndim == 1
+        assert t["consensus_drift"].shape == t["cluster_loss"].shape
+        assert t["participants"].shape == ()
+        assert float(t["participants"]) == K       # full participation
+        assert isinstance(t["extras"], dict)
+        for leaf in jax.tree.leaves(t):
+            assert bool(jnp.isfinite(leaf).all())
+
+    def traj(seed):
+        key = jax.random.PRNGKey(seed)
+        st0 = _stacked(jax.random.fold_in(key, 1))
+
+        def body(carry, k):
+            new_c, cons = s.aggregate(carry, state, k)
+            t = s.telemetry(state, losses=losses, stacked=carry,
+                            new_stacked=new_c, consensus=cons)
+            return new_c, t
+        keys = jax.random.split(jax.random.fold_in(key, 2), 2)
+        _, tele = jax.lax.scan(body, st0, keys)
+        return tele
+
+    tele = jax.jit(jax.vmap(traj))(jnp.arange(2))
+    for leaf in jax.tree.leaves(tele):
+        assert leaf.shape[:2] == (2, 2)            # (seeds, rounds) stacked
+        assert bool(jnp.isfinite(leaf).all())
+
+
+def test_channel_uses_per_strategy():
+    """The paper's §IV per-round cost arithmetic, strategy by strategy
+    (the quantity the in-scan `repro.obs.ledger` accumulates)."""
+    C = 3
+    assert get_strategy("cwfl").channel_uses(K, num_clusters=C) \
+        == C * (C - 1) + C
+    assert get_strategy("decentralized").channel_uses(K) == K * (K - 1)
+    # masked round: the effective participant count drives P(P−1)
+    assert get_strategy("decentralized").channel_uses(
+        K, participants=3.0) == 6.0
+    assert get_strategy("cotaf").channel_uses(K) == 1
+    assert get_strategy("fedavg").channel_uses(K) == 0
+    # prox variants share their base strategy's channel accounting
+    assert get_strategy("cwfl_prox").channel_uses(K, num_clusters=C) \
+        == get_strategy("cwfl").channel_uses(K, num_clusters=C)
 
 
 # ---------------------------------------------------------------------------
