@@ -5,6 +5,10 @@
     PYTHONPATH=src python examples/run_scenario.py --seeds 8 --shard mc
     PYTHONPATH=src python examples/run_scenario.py --shard clients
     PYTHONPATH=src python examples/run_scenario.py --telemetry run.jsonl
+    PYTHONPATH=src python examples/run_scenario.py --scenario head-failure \
+        --checkpoint-dir ckpt --checkpoint-every 4 --stop-after 4   # "crash"
+    PYTHONPATH=src python examples/run_scenario.py --scenario head-failure \
+        --checkpoint-dir ckpt --checkpoint-every 4 --resume         # bitwise
     PYTHONPATH=src python examples/run_scenario.py --list
 
 One seed runs a single scanned trajectory; ``--seeds N`` (N > 1) runs the
@@ -74,6 +78,25 @@ def main() -> None:
     ap.add_argument("--profile-dir", default=None,
                     help="capture a jax.profiler trace into this directory "
                          "(TensorBoard-loadable)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="persist the trajectory carry + metrics for "
+                         "crash-safe resume (single-trajectory runs; see "
+                         "README 'Chaos & resume')")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="rounds per checkpoint segment (0 = one final "
+                         "checkpoint)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint from "
+                         "--checkpoint-dir and continue — the resumed "
+                         "history is bitwise identical to an uninterrupted "
+                         "run")
+    ap.add_argument("--resume-step", type=int, default=None,
+                    help="resume from this specific checkpoint step "
+                         "instead of the latest")
+    ap.add_argument("--stop-after", type=int, default=None,
+                    help="deliberately exit at the first checkpoint "
+                         "boundary >= this round (crash simulation for "
+                         "CI/chaos testing)")
     args = ap.parse_args()
 
     from repro.core import TopologyConfig, make_topology
@@ -127,8 +150,20 @@ def main() -> None:
         mesh = make(args.devices or None)
         print(f"shard={args.shard} mesh={dict(mesh.shape)}")
 
+    is_single = not (args.seeds > 1 or bool(scenario.snr_grid))
+    if args.checkpoint_dir is not None and not is_single:
+        ap.error("--checkpoint-dir checkpoints ONE trajectory; Monte-Carlo "
+                 "sweeps re-run cheaply per seed — drop --seeds / the grid "
+                 "scenario")
+    if args.checkpoint_dir is None and (args.resume
+                                        or args.stop_after is not None):
+        ap.error("--resume/--stop-after need --checkpoint-dir")
+
     telemetry = args.telemetry is not None
-    timers = PhaseTimers() if telemetry else None
+    # Checkpointed runs are multi-segment: phase timers stop meaning
+    # anything (run_rounds refuses the combination), so drop them.
+    timers = (PhaseTimers()
+              if telemetry and args.checkpoint_dir is None else None)
 
     print(f"scenario={args.scenario} strategy={strategy.name} "
           f"K={args.clients} rounds={args.rounds} seeds={args.seeds}"
@@ -193,7 +228,11 @@ def main() -> None:
             h = run_rounds(init, apply, loss, topo, xs, ys, xte, yte, cfg,
                            scenario=scenario, topo_cfg=tcfg,
                            shard=args.shard, mesh=mesh,
-                           telemetry=telemetry, timers=timers)
+                           telemetry=telemetry, timers=timers,
+                           checkpoint_dir=args.checkpoint_dir,
+                           checkpoint_every=args.checkpoint_every,
+                           resume=args.resume, resume_step=args.resume_step,
+                           stop_after=args.stop_after)
         wall = time.perf_counter() - t0
         if timers is not None:
             with timers.phase("gather"):
@@ -213,7 +252,8 @@ def main() -> None:
             "wall_seconds": wall,
             "trajectories": 1,
         }
-    total_rounds = n_traj * args.rounds
+    total_rounds = n_traj * int(acc.shape[-1])   # may be < --rounds when
+    # --stop-after killed a checkpointed run at a segment boundary
     print(f"  {total_rounds} rounds total in {wall:.1f}s "
           f"({total_rounds / wall:.2f} rounds/s incl. compile)")
     manifest = None

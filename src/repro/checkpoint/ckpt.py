@@ -2,6 +2,14 @@
 
 Layout: <dir>/step_<N>/arrays.npz + tree.json (pytree structure + dtypes).
 Works for parameter pytrees, optimizer states and FL client stacks alike.
+
+Non-numpy dtypes (bfloat16): ``np.savez`` cannot serialize ml_dtypes
+arrays, so bf16 leaves are stored as their raw uint16 bit patterns and
+the TRUE dtype is recorded in ``tree.json``; :func:`load_checkpoint`
+re-views the bits back before casting into the template.  The round-trip
+is a reinterpreting ``view`` on both sides — never a value conversion —
+so bf16 checkpoints restore bit-exactly (the resume-determinism contract
+of `repro.sim.engine.run_rounds` depends on it).
 """
 from __future__ import annotations
 
@@ -11,7 +19,11 @@ from pathlib import Path
 from typing import Any, Optional
 
 import jax
+import ml_dtypes
 import numpy as np
+
+# dtypes np.savez can't natively store → (wire dtype, bit-view round-trip).
+_WIRE_DTYPES = {"bfloat16": (np.uint16, ml_dtypes.bfloat16)}
 
 
 def _flatten_with_names(tree) -> dict[str, np.ndarray]:
@@ -28,16 +40,18 @@ def save_checkpoint(directory: str | Path, step: int, tree: Any) -> Path:
     d = Path(directory) / f"step_{step:08d}"
     d.mkdir(parents=True, exist_ok=True)
     arrays = _flatten_with_names(tree)
-    np.savez(d / "arrays.npz", **arrays)
-    structure = jax.tree.map(lambda x: None, tree)
+    dtypes = {k: str(v.dtype) for k, v in arrays.items()}
+    wire = {k: (v.view(_WIRE_DTYPES[str(v.dtype)][0])
+                if str(v.dtype) in _WIRE_DTYPES else v)
+            for k, v in arrays.items()}
+    np.savez(d / "arrays.npz", **wire)
     meta = {
         "step": step,
         "treedef": str(jax.tree.structure(tree)),
         "names": list(arrays.keys()),
-        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        "dtypes": dtypes,
     }
     (d / "tree.json").write_text(json.dumps(meta))
-    del structure
     return d
 
 
@@ -50,15 +64,27 @@ def load_checkpoint(directory: str | Path, template: Any,
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {directory}")
     d = directory / f"step_{step:08d}"
+    if not (d / "arrays.npz").exists():
+        raise FileNotFoundError(f"checkpoint step directory {d} has no "
+                                f"arrays.npz (is step {step} complete?)")
     data = np.load(d / "arrays.npz")
+    meta_path = d / "tree.json"
+    saved_dtypes = (json.loads(meta_path.read_text()).get("dtypes", {})
+                    if meta_path.exists() else {})
     names = list(_flatten_with_names(template).keys())
     leaves_t, treedef = jax.tree_util.tree_flatten(template)
     out = []
     for name, leaf in zip(names, leaves_t):
+        if name not in data:
+            raise KeyError(f"{name}: missing from {d / 'arrays.npz'} — "
+                           f"template does not match this checkpoint")
         arr = data[name]
+        true_dtype = saved_dtypes.get(name)
+        if true_dtype in _WIRE_DTYPES:
+            arr = arr.view(_WIRE_DTYPES[true_dtype][1])
         if tuple(arr.shape) != tuple(leaf.shape):
-            raise ValueError(f"{name}: checkpoint shape {arr.shape} != "
-                             f"template {leaf.shape}")
+            raise ValueError(f"{name} (in {d}): checkpoint shape "
+                             f"{arr.shape} != template {leaf.shape}")
         out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
 

@@ -89,7 +89,8 @@ def cotaf_participation(state: COTAFState,
 
 def cotaf_state_from_gains(link_gain: jnp.ndarray, total_power: float,
                            noise_var, server=None,
-                           csi_perturb: Optional[jnp.ndarray] = None
+                           csi_perturb: Optional[jnp.ndarray] = None,
+                           alive: Optional[jnp.ndarray] = None
                            ) -> COTAFState:
     """COTAF state from a raw (K, K) complex gain matrix — the traced half
     of :func:`cotaf_setup`, usable inside ``lax.scan``/``vmap`` (the
@@ -104,9 +105,23 @@ def cotaf_state_from_gains(link_gain: jnp.ndarray, total_power: float,
     ``csi_perturb``: optional (K,) multiplicative factor on the
     water-filling gains (imperfect CSI at the allocator — same semantics
     as ``cwfl.state_from_plan``).
+
+    ``alive``: optional (K,) {0,1} node-up vector (fault scenarios,
+    DESIGN.md §Faults) — the server FAILOVER rule: selection argmaxes
+    over *surviving* nodes only, so a crashed server hands the role to
+    the best-connected live node that round.  With every node down the
+    unmasked argmax stands (the engine's all-masked guard skips the sync
+    anyway).  ``alive=None`` is byte-identical to the faultless path.
     """
     if server is None:
-        server = jnp.argmax((jnp.abs(link_gain) ** 2).mean(axis=1))
+        mean_gain = (jnp.abs(link_gain) ** 2).mean(axis=1)
+        if alive is None:
+            server = jnp.argmax(mean_gain)
+        else:
+            up = alive > 0
+            masked = jnp.where(up, mean_gain, -jnp.inf)
+            server = jnp.where(jnp.any(up), jnp.argmax(masked),
+                               jnp.argmax(mean_gain))
     s = jnp.asarray(server)
     g = jnp.abs(link_gain[:, s]) ** 2 / noise_var
     g = g.at[s].set(jnp.max(g))  # the server's own data arrives locally

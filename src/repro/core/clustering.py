@@ -121,6 +121,55 @@ def make_cluster_plan(link_snr: jnp.ndarray, adjacency: jnp.ndarray,
                        cluster_snr=cluster_snr, head_mask=head_mask)
 
 
+def reelect_heads(plan: ClusterPlan, link_snr: jnp.ndarray,
+                  alive: jnp.ndarray) -> ClusterPlan:
+    """Head-failure handoff (DESIGN.md §Faults): re-elect crashed heads.
+
+    Pure jnp and `lax.scan`/`vmap`-legal — the engine calls it every
+    fault round; the decision logic is all ``where``s:
+
+    * a cluster whose head is still up keeps it (election stability —
+      handoffs happen on failure, not on every SNR wobble);
+    * a dead head is replaced by the *surviving max-gain member*: the
+      live member of the same cluster with the largest within-cluster
+      aggregate link SNR Σ_j membership[c,j]·ξ_{k,j} (the connectivity a
+      phase-1 receiver actually uses);
+    * a fully-dead cluster keeps its (dead) head — downstream the
+      alive-aware round coefficients zero its row entirely
+      (`cwfl.round_coefficients`), so the stale index is inert.
+
+    Membership/assignment are untouched (failure is not churn; periodic
+    re-clustering still owns geometry changes) while ``cluster_snr`` is
+    re-derived for the new heads with `make_cluster_plan`'s own ξ_c rule,
+    so the phase-2 consensus weights re-derive from the survivor's links.
+    """
+    K = link_snr.shape[0]
+    a = alive.astype(jnp.float32)
+    # score[c, k]: client k's aggregate link SNR into cluster c's members.
+    score = plan.membership @ link_snr.T                           # (C, K)
+    cand = plan.membership * a[None, :]                            # (C, K)
+    elig = jnp.where(cand > 0, score, -jnp.inf)
+    new_heads = jnp.argmax(elig, axis=1).astype(plan.heads.dtype)  # (C,)
+    any_cand = jnp.any(cand > 0, axis=1)
+    keep = a[plan.heads] > 0
+    heads = jnp.where(keep, plan.heads,
+                      jnp.where(any_cand, new_heads, plan.heads))
+
+    head_onehot = jax.nn.one_hot(heads, K, dtype=jnp.float32)      # (C, K)
+    head_mask = head_onehot.sum(0)
+
+    # ξ_c for the (possibly new) heads — same rule as make_cluster_plan.
+    snr_to_head = link_snr[heads]                                  # (C, K)
+    member_not_head = plan.membership * (1.0 - head_onehot)
+    denom = jnp.maximum(member_not_head.sum(1), 1.0)
+    cluster_snr = (snr_to_head * member_not_head).sum(1) / denom
+    cluster_snr = jnp.where(member_not_head.sum(1) > 0, cluster_snr,
+                            jnp.max(link_snr))
+    return ClusterPlan(assignment=plan.assignment, heads=heads,
+                       membership=plan.membership, cluster_snr=cluster_snr,
+                       head_mask=head_mask)
+
+
 def consensus_weights(cluster_snr: jnp.ndarray) -> jnp.ndarray:
     """Paper eq. (9) weights: W(c, j) = ξ_j / Σ_{j'≠c} ξ_{j'},  W(c, c) = 0.
 

@@ -211,44 +211,81 @@ def phase1_weights(state: CWFLState) -> jnp.ndarray:
     return state.plan.membership * w_k[None, :]
 
 
-def phase2_weights(state: CWFLState, normalize: bool = True):
+def phase2_weights(state: CWFLState, normalize: bool = True, live=None):
     """(C, C) inter-head mix ``B = W + I`` and (C,) equivalent per-receiver
     noise std κ_c = sqrt(Σ_j W(c,j)²)·σ̃ (eq. 9 / lemma 2 with independent
     per-link noise; the self-link is local and noiseless).  With
     ``normalize`` both are renormalized by the row sums (convex-combination
-    mode, DESIGN.md §1)."""
+    mode, DESIGN.md §1).
+
+    ``live``: optional (C,) {0,1} cluster-liveness (fault scenarios,
+    DESIGN.md §Faults) — a *dead* cluster (every member crashed, head
+    included) transmits nothing in phase 2, so its B̃ *column* is zeroed
+    before the row renormalization: each surviving head mixes the live
+    heads only, with its noise renormalized by the (smaller) live row
+    mass.  Dead *rows* are kept as that live-only mix — the receiver math
+    is virtual (nobody is home to run it), but it keeps θ̄_dead a sane
+    convex combination of live clusters so the consensus mean stays
+    well-defined.  ``live=None`` is byte-identical to the faultless path.
+    """
     b = state.mix + jnp.eye(state.num_clusters)
     eff_std2 = state.consensus_noise_std / jnp.sqrt(state.total_power)
-    kappa = jnp.sqrt(jnp.sum(state.mix ** 2, axis=1)) * eff_std2
+    if live is None:
+        kappa = jnp.sqrt(jnp.sum(state.mix ** 2, axis=1)) * eff_std2
+        if normalize:
+            row_sums = b.sum(axis=1, keepdims=True)
+            b = b / row_sums
+            kappa = kappa / row_sums[:, 0]
+        return b, kappa
+    lv = live.astype(jnp.float32)
+    b = b * lv[None, :]
+    kappa = jnp.sqrt(jnp.sum((state.mix * lv[None, :]) ** 2,
+                             axis=1)) * eff_std2
     if normalize:
-        row_sums = b.sum(axis=1, keepdims=True)
+        # All-dead plans leave all-zero rows; guard the division (the
+        # engine's all-masked sync-skip discards the output anyway).
+        row_sums = jnp.maximum(b.sum(axis=1, keepdims=True), 1e-12)
         b = b / row_sums
         kappa = kappa / row_sums[:, 0]
     return b, kappa
 
 
 def participation_weights(state: CWFLState,
-                          mask: Optional[jnp.ndarray]) -> Optional[jnp.ndarray]:
+                          mask: Optional[jnp.ndarray],
+                          alive: Optional[jnp.ndarray] = None
+                          ) -> Optional[jnp.ndarray]:
     """(K,) effective participation for one round, or ``None`` if unmasked.
 
     Cluster-heads are forced present: they are the phase-1 *receivers* and
     the phase-2 consensus endpoints, so a head dropping out would kill its
     whole cluster (an all-zero Ã row whose renormalization then amplifies
     the receiver noise unboundedly).  A mask entry of 0 on a head is
-    therefore silently ignored — modelling a true head outage requires
-    re-electing heads (re-clustering), not masking; see the
-    `cluster-churn` scenario in `repro.sim.scenarios`.
+    therefore silently ignored — an app-level absence (scheduling) does
+    not take the *receiver* offline.
+
+    A true head outage is different: ``alive`` (fault scenarios,
+    `repro.sim.faults`) is the (K,) {0,1} node-up vector of the Markov
+    crash chain, and a *crashed* head is NOT forced present — the
+    ``on_head_failure`` handoff re-elects a surviving head first, so the
+    only way a forced-present entry dies is when its whole cluster
+    crashed (handled by ``round_coefficients``'s dead-row guard).
+    ``alive=None`` keeps the faultless behavior byte-identical.
     """
-    if mask is None:
+    if mask is None and alive is None:
         return None
-    return jnp.where(state.plan.head_mask > 0, 1.0,
-                     mask.astype(jnp.float32))
+    forced = state.plan.head_mask
+    if alive is not None:
+        forced = forced * alive.astype(jnp.float32)
+    m = (jnp.ones_like(forced) if mask is None
+         else mask.astype(jnp.float32))
+    return jnp.where(forced > 0, 1.0, m)
 
 
 def round_coefficients(state: CWFLState, stacked_params=None,
                        normalize: bool = True, precode: bool = True,
                        mask: Optional[jnp.ndarray] = None,
-                       mean_sq: Optional[jnp.ndarray] = None):
+                       mean_sq: Optional[jnp.ndarray] = None,
+                       alive: Optional[jnp.ndarray] = None):
     """The complete weight set of one sync round: phase-1 amplitudes Ã
     (precoded + renormalized), the effective phase-1 receiver noise std,
     the consensus mix B̃ with its equivalent noise std κ, and the phase-3
@@ -268,9 +305,18 @@ def round_coefficients(state: CWFLState, stacked_params=None,
     the physical behaviour.  Heads are always present (see
     :func:`participation_weights`).  ``mask=None`` and an all-ones mask
     produce bit-identical coefficients.
+
+    ``alive``: optional (K,) {0,1} node-up vector (fault scenarios,
+    DESIGN.md §Faults).  Crashed heads lose their forced-present status
+    (:func:`participation_weights`), and a cluster whose *every* member
+    crashed becomes a dead row: its phase-1 weights AND its receiver
+    noise are zeroed (θ̃_dead ≡ 0 instead of the ~1e12× noise
+    amplification an all-zero row's renormalization would produce), and
+    its phase-2 column is pruned from B̃ (:func:`phase2_weights`).
+    ``alive=None`` adds zero traced ops.
     """
     A = phase1_weights(state)                                    # (C, K)
-    part = participation_weights(state, mask)
+    part = participation_weights(state, mask, alive=alive)
     if part is not None:
         A = A * part[None, :]
 
@@ -292,11 +338,25 @@ def round_coefficients(state: CWFLState, stacked_params=None,
     # Receiver scaling (eq. 8): AWGN std σ_c/sqrt(P); with normalization
     # both weights and noise are divided by the phase-1 row sums.
     eff_std1 = state.head_noise_std / jnp.sqrt(state.total_power)
+    if alive is None:
+        if normalize:
+            rows = jnp.maximum(A.sum(axis=1, keepdims=True), 1e-12)
+            A = A / rows
+            eff_std1 = eff_std1 / rows[:, 0]
+        B, kappa = phase2_weights(state, normalize)
+        return A, eff_std1, B, kappa, state.plan.membership.T
+    # Fault path: a cluster with zero present transmit mass (everyone
+    # crashed/silenced, head included) is DEAD — zero its weights and its
+    # noise rather than divide both by the 1e-12 floor.
+    raw = A.sum(axis=1, keepdims=True)
+    dead = raw[:, 0] <= 0.0
     if normalize:
-        rows = jnp.maximum(A.sum(axis=1, keepdims=True), 1e-12)
+        rows = jnp.maximum(raw, 1e-12)
         A = A / rows
         eff_std1 = eff_std1 / rows[:, 0]
-    B, kappa = phase2_weights(state, normalize)
+    A = jnp.where(dead[:, None], 0.0, A)
+    eff_std1 = jnp.where(dead, 0.0, eff_std1)
+    B, kappa = phase2_weights(state, normalize, live=~dead)
     return A, eff_std1, B, kappa, state.plan.membership.T
 
 
@@ -327,7 +387,9 @@ def _flat_unpack(new_flat: jnp.ndarray, cons_flat: jnp.ndarray,
 
 def _aggregate_flat(stacked_params, state: CWFLState, key: jax.Array,
                     normalize: bool, precode: bool,
-                    mask: Optional[jnp.ndarray] = None):
+                    mask: Optional[jnp.ndarray] = None,
+                    alive: Optional[jnp.ndarray] = None,
+                    guard: bool = False):
     """Flatten-once fast path: one (K, d) matrix through the fused
     single-pass round kernel instead of the per-leaf ``_mix_rows`` loop.
     The noise stream replicates the per-leaf path exactly (same key
@@ -338,20 +400,23 @@ def _aggregate_flat(stacked_params, state: CWFLState, key: jax.Array,
     C = state.num_clusters
     k1, k2 = jax.random.split(key)
     A, eff_std1, B, kappa, m_back = round_coefficients(
-        state, stacked_params, normalize, precode, mask)
+        state, stacked_params, normalize, precode, mask, alive=alive)
 
     flat = _flat_pack(leaves, K)
     n1 = _flat_leaf_noise(k1, leaves, C, eff_std1)
     n2 = _flat_leaf_noise(k2, leaves, C, kappa)
 
-    new_flat, cons_flat = cwfl_round_auto(flat, A, n1, B, n2, m_back)
+    new_flat, cons_flat = cwfl_round_auto(flat, A, n1, B, n2, m_back,
+                                          guard=guard)
     return _flat_unpack(new_flat, cons_flat, leaves, treedef, K)
 
 
 def aggregate(stacked_params, state: CWFLState, key: jax.Array,
               normalize: bool = True, precode: bool = True,
               flat: Optional[bool] = None,
-              mask: Optional[jnp.ndarray] = None):
+              mask: Optional[jnp.ndarray] = None,
+              alive: Optional[jnp.ndarray] = None,
+              guard: bool = False):
     """One CWFL sync round. Returns (new_stacked_params, consensus_mean).
 
     ``stacked_params``: pytree, every leaf (K, ...).
@@ -374,17 +439,33 @@ def aggregate(stacked_params, state: CWFLState, key: jax.Array,
       :func:`round_coefficients`).  The transmit side only — deciding
       whether absent clients still *receive* the phase-3 broadcast is the
       scenario layer's job (`repro.sim.engine` keeps their local params).
+    ``alive``: optional (K,) {0,1} node-up vector of a fault scenario —
+      crashed heads lose forced presence, all-crashed clusters become
+      zeroed dead rows (see :func:`round_coefficients`).
+    ``guard`` (STATIC flag): engage the kernel-level NaN/dead-row guard
+      — non-finite signals are sanitized to 0 before the OTA matmuls so a
+      poisoned transmit cannot NaN the consensus (the `repro.kernels`
+      route mirrors it in the fused kernel).  Off by default: guard-off
+      traces byte-identical jaxprs.
     """
     if flat is None:
         flat = all(x.dtype == jnp.float32
                    for x in jax.tree.leaves(stacked_params))
     if flat:
         return _aggregate_flat(stacked_params, state, key, normalize,
-                               precode, mask)
+                               precode, mask, alive=alive, guard=guard)
 
     k1, k2 = jax.random.split(key)
     A, eff_std1, B, kappa, m_back = round_coefficients(
-        state, stacked_params, normalize, precode, mask)
+        state, stacked_params, normalize, precode, mask, alive=alive)
+    if guard:
+        # Per-leaf route of the same kernel guard: sanitize non-finite
+        # signals before they meet the matmuls (0 × NaN = NaN — masking
+        # alone cannot contain a poisoned transmit).
+        stacked_params = jax.tree.map(
+            lambda x: jnp.where(jnp.isfinite(x), x,
+                                jnp.zeros((), x.dtype)),
+            stacked_params)
 
     # Phase 1: OTA superposition at each head + receiver AWGN (eq. 8).
     theta_tilde = _mix_rows(A, stacked_params, k1, eff_std1)

@@ -68,21 +68,21 @@ def _fit_tile(tile: int, d: int) -> int:
     return max(128, min(tile, -(-d // 128) * 128))
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tile", "interpret", "guard"))
 def cwfl_round(signals: jnp.ndarray, phase1: jnp.ndarray,
                noise1: jnp.ndarray, phase2: jnp.ndarray,
                noise2: jnp.ndarray, broadcast: jnp.ndarray, *,
                tile: int = DEFAULT_TILE,
-               interpret: Optional[bool] = None):
+               interpret: Optional[bool] = None, guard: bool = False):
     """One fused CWFL sync round over flat client signals.
 
-    signals: (K, d) client parameter vectors (f32 or bf16; accumulation is
-      always f32, outputs cast back to ``signals.dtype``).
+    signals: (K, d) client parameter vectors (f32/bf16; f32 accumulate).
     phase1:  (C, K) OTA MAC amplitudes Ã (precoded/normalized by caller).
     noise1:  (C, d) phase-1 receiver AWGN (pre-generated).
     phase2:  (C, C) consensus mix B̃.
     noise2:  (C, d) phase-2 equivalent receiver noise.
     broadcast: (K, C) phase-3 downlink matrix (usually ``membership.T``).
+    guard (static): in-kernel NaN/dead-Ã-row guard (fault scenarios).
     Returns ``(new (K, d) signals.dtype, consensus (d,) f32)``.
     """
     interpret = resolve_interpret(interpret)
@@ -96,7 +96,7 @@ def cwfl_round(signals: jnp.ndarray, phase1: jnp.ndarray,
         noise2 = jnp.pad(noise2, ((0, 0), (0, dp - d)))
 
     new, cons = pl.pallas_call(
-        _cwfl_round_kernel,
+        _cwfl_round_kernel_guard if guard else _cwfl_round_kernel,
         grid=(dp // tile,),
         in_specs=[
             pl.BlockSpec((C, K), lambda t: (0, 0)),
@@ -121,21 +121,56 @@ def cwfl_round(signals: jnp.ndarray, phase1: jnp.ndarray,
     return new[:, :d], cons[0, :d]
 
 
+def _cwfl_round_kernel_guard(a_ref, b_ref, m_ref, s_ref, n1_ref, n2_ref,
+                             new_ref, cons_ref):
+    """:func:`_cwfl_round_kernel` with the fault guard (mirrors
+    ``repro.kernels.ref.cwfl_round_ref(..., guard=True)``): sanitize
+    non-finite signals to 0 and zero all-dead Ã rows before the consensus
+    mix.  Cheap VPU elementwise ops on the already-VMEM-resident blocks;
+    the Ã row-sum reduction is (C, K)-tiny and grid-invariant.  Kept as a
+    separate kernel so the faults-off trace is byte-identical to the
+    unguarded round (origin names + source lines are baked into jaxprs).
+    """
+    s = s_ref[...].astype(jnp.float32)                       # (K, T)
+    a = a_ref[...].astype(jnp.float32)                       # (C, K)
+    b = b_ref[...].astype(jnp.float32)                       # (C, C)
+    m = m_ref[...].astype(jnp.float32)                       # (K, C)
+    s = jnp.where(jnp.isfinite(s), s, 0.0)
+
+    dims = (((1,), (0,)), ((), ()))
+    theta_tilde = jax.lax.dot_general(
+        a, s, dims, preferred_element_type=jnp.float32)
+    theta_tilde = theta_tilde + n1_ref[...].astype(jnp.float32)   # (C, T)
+    dead = jnp.sum(jnp.abs(a), axis=1, keepdims=True) <= 0.0
+    theta_tilde = jnp.where(dead, 0.0, theta_tilde)
+    theta_bar = jax.lax.dot_general(
+        b, theta_tilde, dims, preferred_element_type=jnp.float32)
+    theta_bar = theta_bar + n2_ref[...].astype(jnp.float32)       # (C, T)
+    new = jax.lax.dot_general(
+        m, theta_bar, dims, preferred_element_type=jnp.float32)   # (K, T)
+    new_ref[...] = new.astype(new_ref.dtype)
+    cons_ref[...] = jnp.mean(theta_bar, axis=0, keepdims=True)
+
+
 def cwfl_round_auto(signals, phase1, noise1, phase2, noise2, broadcast, *,
                     tile: int = DEFAULT_TILE,
                     interpret: Optional[bool] = None,
-                    use_pallas: Optional[bool] = None):
+                    use_pallas: Optional[bool] = None,
+                    guard: bool = False):
     """Route one round through the fused kernel when the flat dimension is
     large enough to benefit (``d >= PALLAS_MIN_DIM``), else the jnp
-    reference (a single fused XLA computation at small d)."""
+    reference (a single fused XLA computation at small d).  ``guard``
+    engages the NaN/dead-row guard on whichever route is taken."""
     from repro.kernels.ref import cwfl_round_ref
 
     if use_pallas is None:
         use_pallas = signals.shape[1] >= PALLAS_MIN_DIM
     if use_pallas:
         return cwfl_round(signals, phase1, noise1, phase2, noise2,
-                          broadcast, tile=tile, interpret=interpret)
-    return cwfl_round_ref(signals, phase1, noise1, phase2, noise2, broadcast)
+                          broadcast, tile=tile, interpret=interpret,
+                          guard=guard)
+    return cwfl_round_ref(signals, phase1, noise1, phase2, noise2, broadcast,
+                          guard=guard)
 
 
 def hbm_bytes_model(K: int, C: int, d: int, itemsize: int = 4) -> dict:

@@ -20,16 +20,32 @@ def ota_aggregate_ref(signals: jnp.ndarray, weights: jnp.ndarray,
 
 def cwfl_round_ref(signals: jnp.ndarray, phase1: jnp.ndarray,
                    noise1: jnp.ndarray, phase2: jnp.ndarray,
-                   noise2: jnp.ndarray, broadcast: jnp.ndarray):
+                   noise2: jnp.ndarray, broadcast: jnp.ndarray,
+                   guard: bool = False):
     """Three-pass CWFL sync round (the unfused baseline the fused
     ``cwfl_round`` kernel must match bit-for-bit in f32).
 
     signals: (K, d); phase1: (C, K) Ã; noise1: (C, d); phase2: (C, C) B̃;
     noise2: (C, d); broadcast: (K, C) downlink matrix (membership.T).
     Returns ``(new (K, d) signals.dtype, consensus (d,) f32)``.
+
+    ``guard`` (STATIC flag, fault scenarios — DESIGN.md §Faults): the
+    CWFL cousin of the flash-attention "fully-masked rows -> 0" rule
+    below.  Non-finite signals are sanitized to 0 *before* the phase-1
+    matmul (a quarantined client's zero amplitude still multiplies its
+    NaN signal — 0 × NaN = NaN — so masking alone cannot contain it),
+    and a fully-masked Ã row (an all-failed cluster) forces its θ̃ row —
+    noise included — to exactly 0 instead of the renormalized noise
+    blow-up.  Guard-off traces a byte-identical jaxpr.
     """
     s = signals.astype(jnp.float32)
-    theta_tilde = phase1.astype(jnp.float32) @ s + noise1.astype(jnp.float32)
+    a = phase1.astype(jnp.float32)
+    if guard:
+        s = jnp.where(jnp.isfinite(s), s, 0.0)
+    theta_tilde = a @ s + noise1.astype(jnp.float32)
+    if guard:
+        dead = jnp.sum(jnp.abs(a), axis=1, keepdims=True) <= 0.0
+        theta_tilde = jnp.where(dead, 0.0, theta_tilde)
     theta_bar = (phase2.astype(jnp.float32) @ theta_tilde
                  + noise2.astype(jnp.float32))
     new = (broadcast.astype(jnp.float32) @ theta_bar).astype(signals.dtype)

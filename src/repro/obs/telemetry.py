@@ -83,7 +83,7 @@ def stacked_consensus_drift(stacked, consensus) -> jnp.ndarray:
 def build_round_telemetry(strategy, state, *, losses, stacked, new_stacked,
                           consensus, mask, num_clients: int,
                           num_clusters: int, ledger: dict,
-                          reclustered=None):
+                          reclustered=None, fault_extras=None):
     """Assemble one :class:`RoundTelemetry` from the round body's
     intermediates plus the `Strategy.telemetry` hook, and advance the
     cumulative channel-use ledger.
@@ -93,11 +93,21 @@ def build_round_telemetry(strategy, state, *, losses, stacked, new_stacked,
     offline state on the static path); ``stacked`` is the post-local-
     training / pre-sync parameter stack; ``reclustered`` is the
     `lax.cond` predicate of the re-clustering gate (``None`` when the
-    scenario never reclusters).
+    scenario never reclusters); ``fault_extras`` is the fault plane's
+    per-round event dict (`repro.sim.faults` — alive/tx_ok vectors, burst
+    and blackout indicators, quarantine count), merged into ``extras``
+    under ``fault_*`` keys so fault events ride the same scan output as
+    every other observable (``None`` on fault-free builds — zero pytree
+    change).
     """
     t = strategy.telemetry(state, losses=losses, stacked=stacked,
                            new_stacked=new_stacked, consensus=consensus,
                            mask=mask)
+    extras = t.get("extras", {})
+    if fault_extras is not None:
+        extras = dict(extras)
+        extras.update({f"fault_{k}": jnp.asarray(v, jnp.float32)
+                       for k, v in fault_extras.items()})
     uses = jnp.asarray(
         strategy.channel_uses(num_clients, num_clusters=num_clusters,
                               participants=t["participants"]), jnp.float32)
@@ -113,6 +123,6 @@ def build_round_telemetry(strategy, state, *, losses, stacked, new_stacked,
         cum_symbols=new_ledger["symbols"],
         reclustered=(jnp.zeros((), jnp.float32) if reclustered is None
                      else jnp.asarray(reclustered, jnp.float32)),
-        extras=t.get("extras", {}),
+        extras=extras,
     )
     return tele, new_ledger

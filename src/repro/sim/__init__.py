@@ -8,6 +8,8 @@ FL trajectories on device (vmap-able over seeds and scenario scalars).
 mesh — the seeds × SNR grid over a ``("mc",)`` axis, or one large-K
 trajectory's client axis over ``("clients",)`` (DESIGN.md §Sharded-MC).
 """
+from repro.sim.faults import (FaultConfig, FaultState, FaultView,
+                              init_faults, quarantine_mask, step_faults)
 from repro.sim.processes import (ChannelProcessConfig, ChannelState,
                                  ChannelView, channel_view, csi_perturbation,
                                  init_channel, step_channel)

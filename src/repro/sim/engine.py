@@ -33,7 +33,9 @@ structure for A/B benchmarking and the equivalence test).
 """
 from __future__ import annotations
 
+import json
 import warnings
+from pathlib import Path
 from typing import Any, Callable, Optional
 
 import jax
@@ -45,6 +47,7 @@ from repro.core.topology import Topology, TopologyConfig
 from repro.models.small import accuracy as _accuracy
 from repro.obs.telemetry import build_round_telemetry, init_ledger
 from repro.optim import sgd
+from repro.sim.faults import init_faults, quarantine_mask, step_faults
 from repro.sim.processes import (ChannelView, channel_view, csi_perturbation,
                                  init_channel, step_channel)
 from repro.sim.scenarios import Scenario
@@ -128,6 +131,8 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
     static = scenario.is_static
     dyn_chan = scenario.channel.evolves_geometry  # CSI-only needs no geometry
     masked = not scenario.schedule.is_trivial
+    faulty = not scenario.faults.is_trivial       # STATIC flag, like telemetry
+    fcfg = scenario.faults
     recluster = scenario.recluster_every
     total_power = float(topology.total_power)
     if dyn_chan and topo_cfg is None:
@@ -162,6 +167,8 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
                   else ch.snr_db_to_noise_var(total_power, snr_db))
             if masked:
                 carry["sched"] = init_schedule(scenario.schedule, K)
+            if faulty:
+                carry["faults"] = init_faults(fcfg, K)
             if dyn_chan:
                 carry["chan"] = init_channel(
                     topology, topo_cfg, jax.random.fold_in(key, _SIM_SALT + 1))
@@ -184,14 +191,19 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
             state0, nv = ctx
 
         def dynamic_sync(carry, stacked, inp, k_agg):
-            """One scenario-aware sync: channel step → state rebuild →
-            masked aggregation.  Mutates ``carry`` (a per-round copy).
-            Returns ``(new, consensus, state, mask, reclustered)`` — the
-            trailing three feed the telemetry hook and are plain Python
-            ``None``s (no extra traced ops) when unused."""
+            """One scenario-aware sync: channel step → fault step →
+            state rebuild → masked aggregation.  Mutates ``carry`` (a
+            per-round copy).  Returns ``(new, consensus, state, mask,
+            reclustered, fault_extras)`` — the trailing four feed the
+            telemetry hook and are plain Python ``None``s (no extra
+            traced ops) when unused."""
             t = inp["t"]
-            k_chan, k_csi, k_mask, k_cluster = jax.random.split(
-                inp["skey"], 4)
+            if faulty:
+                (k_chan, k_csi, k_mask, k_cluster, k_fault,
+                 k_handoff) = jax.random.split(inp["skey"], 6)
+            else:
+                k_chan, k_csi, k_mask, k_cluster = jax.random.split(
+                    inp["skey"], 4)
 
             if dyn_chan:
                 chan = step_channel(carry["chan"], scenario.channel, topo_cfg,
@@ -207,6 +219,37 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
             if masked:
                 mask, carry["sched"] = participation_mask(
                     scenario.schedule, carry["sched"], t, k_mask, K)
+
+            alive = None
+            fault_extras = None
+            if faulty:
+                # Fault plane (repro.sim.faults): advance the crash /
+                # burst / blackout chains, fold transmit outages into the
+                # participation mask (same renormalization path as
+                # scheduling absences), and quarantine poisoned client
+                # updates BEFORE they can touch a MAC matmul — a
+                # quarantined client transmits nothing and keeps its own
+                # pre-round params (0 × NaN = NaN, so masking alone
+                # cannot contain a non-finite update).
+                carry["faults"], fview = step_faults(carry["faults"], fcfg,
+                                                     k_fault)
+                alive = fview.alive
+                mask = (fview.tx_ok if mask is None
+                        else mask * fview.tx_ok)
+                q = None
+                if fcfg.divergence_guard:
+                    q = quarantine_mask(stacked, fcfg.quarantine_norm)
+                    stacked = _tree_where(q, stacked, carry["stacked"])
+                    mask = mask * q
+                if telemetry:
+                    fault_extras = {
+                        "alive": alive,
+                        "tx_ok": fview.tx_ok,
+                        "burst": fview.burst,
+                        "deep_fade": fview.deep_fade,
+                        "quarantined": (jnp.zeros((), jnp.float32)
+                                        if q is None else jnp.sum(1.0 - q)),
+                    }
             # Imperfect CSI hits every strategy that water-fills power
             # from channel estimates (CWFL member→head, COTAF →server).
             csi = (csi_perturbation(k_csi, K, scenario.channel.csi_error_std)
@@ -226,12 +269,22 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
                 if telemetry:
                     reclustered = fire
 
-            state = strategy.state_from_view(state0, view, nv, csi=csi,
-                                             mask=mask, plan=plan)
-            new, consensus = strategy.aggregate(stacked, state, k_agg,
-                                                mask=mask)
+            if faulty:
+                # Infrastructure handoff (stateless — derived fresh each
+                # round, so a recovered head/server resumes on its own):
+                # CWFL re-elects dead cluster-heads; strategies without a
+                # plan pass through.  The re-elected plan deliberately
+                # does NOT go back into carry["plan"].
+                plan = strategy.on_head_failure(state0, plan, view, alive,
+                                                k_handoff)
 
-            recv = (strategy.receive_mask(state, mask)
+            state = strategy.state_from_view(state0, view, nv, csi=csi,
+                                             mask=mask, plan=plan,
+                                             alive=alive)
+            new, consensus = strategy.aggregate(stacked, state, k_agg,
+                                                mask=mask, alive=alive)
+
+            recv = (strategy.receive_mask(state, mask, alive=alive)
                     if mask is not None else None)
             if recv is not None:
                 # Receive side: absent clients keep their locally-trained
@@ -247,7 +300,7 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
                 consensus = jax.tree.map(
                     lambda n, o: jnp.where(present, n, o),
                     consensus, carry["consensus"])
-            return new, consensus, state, mask, reclustered
+            return new, consensus, state, mask, reclustered, fault_extras
 
         def body(carry, inp):
             carry = dict(carry)
@@ -258,10 +311,11 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
             if static:
                 stacked, consensus = strategy.aggregate(trained, state0,
                                                         k_agg)
-                state, mask, reclustered = state0, None, None
+                state, mask, reclustered, fault_extras = (state0, None,
+                                                          None, None)
             else:
-                stacked, consensus, state, mask, reclustered = dynamic_sync(
-                    carry, trained, inp, k_agg)
+                (stacked, consensus, state, mask, reclustered,
+                 fault_extras) = dynamic_sync(carry, trained, inp, k_agg)
             logits = apply_fn(consensus, x_ev)
             acc = _accuracy(logits, y_ev)
             carry.update(stacked=stacked, opt=opt_state, consensus=consensus)
@@ -281,12 +335,113 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
                 strategy, state, losses=tele_losses, stacked=trained,
                 new_stacked=stacked, consensus=consensus, mask=mask,
                 num_clients=K, num_clusters=cfg.num_clusters,
-                ledger=carry["obs"], reclustered=reclustered)
+                ledger=carry["obs"], reclustered=reclustered,
+                fault_extras=fault_extras)
             return carry, (jnp.mean(losses), acc, tele)
 
         return body
 
     return prepare, make_body
+
+
+def checkpoint_manifest(directory, cfg, scenario, strategy_name: str,
+                        resume: bool) -> None:
+    """Stamp (or validate) the checkpoint directory's run identity.
+
+    First save writes an `repro.obs.manifest` record whose
+    ``config_hash`` covers (config, scenario, strategy); every later
+    save/resume against the same directory must hash identically —
+    resuming a trajectory under a different protocol would silently
+    splice incompatible histories, so it is an error instead.
+    """
+    from repro.obs.manifest import build_manifest, config_hash, to_jsonable
+
+    directory = Path(directory)
+    chash = config_hash(to_jsonable(cfg), to_jsonable(scenario),
+                        strategy_name)
+    path = directory / "manifest.json"
+    if path.exists():
+        recorded = json.loads(path.read_text()).get("config_hash")
+        if recorded != chash:
+            raise ValueError(
+                f"checkpoint directory {directory} belongs to a different "
+                f"run protocol (manifest config_hash {recorded!r} != this "
+                f"run's {chash!r}); use a fresh checkpoint dir or the "
+                f"original config/scenario/strategy")
+    elif resume:
+        raise FileNotFoundError(
+            f"resume: {path} not found — nothing to resume from")
+    else:
+        directory.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(
+            build_manifest(cfg, scenario, strategy_name,
+                           extra={"kind": "trajectory-checkpoint"}),
+            indent=2, sort_keys=True))
+
+
+def _run_scan_checkpointed(fn, carry, scan_xs, T: int, directory,
+                           every: int, *, resume: bool,
+                           resume_step: Optional[int], stop_after:
+                           Optional[int], cfg, scenario, strategy_name: str):
+    """Drive the scanned trajectory in checkpointed segments.
+
+    The T-round scan is split at every ``every`` rounds; after each
+    segment the FULL carry (param stacks, optimizer + strategy/process
+    states, telemetry ledger) and the metrics accumulated so far are
+    persisted via `repro.checkpoint` under ``step_<rounds_done>``.
+    Because the scanned trajectory is bit-identical to the per-round
+    loop over the same body (the unroll-fusion contract pinned in
+    tests/test_sim_engine.py), a chunked scan — and therefore an
+    interrupted-and-resumed trajectory — replays the uninterrupted
+    history BITWISE; `prepare` is eager and deterministic, so the
+    per-round scan inputs regenerate identically on resume and only the
+    carry needs disk.
+
+    Returns ``(carry, out, rounds_done)``; ``rounds_done < T`` only when
+    ``stop_after`` deliberately kills the run at a segment boundary (the
+    CI chaos-smoke's crash stand-in).
+    """
+    from repro.checkpoint import (latest_step, load_checkpoint,
+                                  save_checkpoint)
+
+    directory = Path(directory)
+    every = T if every is None or int(every) <= 0 else min(int(every), T)
+    checkpoint_manifest(directory, cfg, scenario, strategy_name, resume)
+
+    def sliced(lo, hi):
+        return jax.tree.map(lambda x: x[lo:hi], scan_xs)
+
+    def out_template(n):
+        shapes = jax.eval_shape(fn, carry, sliced(0, n))[1]
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+    start, acc = 0, None
+    if resume:
+        step = resume_step if resume_step is not None else (
+            latest_step(directory))
+        if step is None:
+            raise FileNotFoundError(
+                f"resume: no checkpoint steps in {directory}")
+        if not 0 < step <= T:
+            raise ValueError(
+                f"resume: checkpoint step {step} outside this run's "
+                f"1..{T} round range")
+        payload = load_checkpoint(
+            directory, {"carry": carry, "out": out_template(step)},
+            step=step)
+        carry, acc, start = payload["carry"], payload["out"], int(step)
+
+    pos = start
+    while pos < T:
+        end = min(pos + every, T)
+        carry, seg = fn(carry, sliced(pos, end))
+        acc = seg if acc is None else jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), acc, seg)
+        pos = end
+        save_checkpoint(directory, pos, {"carry": carry, "out": acc})
+        if stop_after is not None and pos >= int(stop_after) and pos < T:
+            break
+    return carry, acc, pos
 
 
 def make_trajectory_fn(prepare: Callable, make_body: Callable) -> Callable:
@@ -316,7 +471,12 @@ def run_rounds(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
                shard: Optional[str] = None,
                mesh=None,
                telemetry: bool = False,
-               timers=None) -> dict[str, Any]:
+               timers=None,
+               checkpoint_dir: Optional[str] = None,
+               checkpoint_every: int = 0,
+               resume: bool = False,
+               resume_step: Optional[int] = None,
+               stop_after: Optional[int] = None) -> dict[str, Any]:
     """Run one FL trajectory; returns history with on-device arrays.
 
     ``mode="scan"`` (default): the whole trajectory is one jit — no
@@ -335,8 +495,32 @@ def run_rounds(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
     the run into ``trace_compile`` (AOT ``lower().compile()``) and
     ``execute`` (to ``block_until_ready``) wall phases; ``None`` keeps
     the default jit path untouched.
+
+    Checkpoint/resume (DESIGN.md §Faults): ``checkpoint_dir`` persists
+    the full scan carry + accumulated metrics every
+    ``checkpoint_every`` rounds (0 ⇒ one final checkpoint) via
+    `repro.checkpoint`, manifest-stamped with the run's config hash;
+    ``resume=True`` restores the latest step (or ``resume_step``) and
+    continues such that the interrupted+resumed history is BITWISE
+    identical to an uninterrupted run.  ``stop_after=r`` deliberately
+    exits at the first segment boundary ≥ r (crash simulation — CI's
+    chaos-smoke).  Scan mode only; ``mode="loop"`` raises.
     """
     scenario = scenario or Scenario()
+    if checkpoint_dir is None and (resume or stop_after is not None):
+        raise ValueError(
+            "resume/stop_after need checkpoint_dir — there is nothing to "
+            "restore from or checkpoint into")
+    if checkpoint_dir is not None:
+        if mode != "scan":
+            raise ValueError(
+                "checkpointing chunks the scanned trajectory; "
+                "mode='loop' is not supported (and needs no resume — it "
+                "is already a host loop)")
+        if timers is not None:
+            raise ValueError(
+                "timers profile a single-segment run; combine them with "
+                "checkpointing and the phases stop meaning anything")
     if shard is not None:
         if shard != "clients":
             raise ValueError(
@@ -351,7 +535,9 @@ def run_rounds(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
         from repro.sim import sharded
         return sharded.run_rounds_client_sharded(
             init_fn, apply_fn, loss_fn, topology, xs, ys, x_test, y_test,
-            cfg, scenario=scenario, mesh=mesh, telemetry=telemetry)
+            cfg, scenario=scenario, mesh=mesh, telemetry=telemetry,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            resume=resume, resume_step=resume_step, stop_after=stop_after)
     prepare, make_body = _build(init_fn, apply_fn, loss_fn, topology, xs, ys,
                                 x_test, y_test, cfg, scenario, topo_cfg,
                                 telemetry=telemetry)
@@ -368,7 +554,13 @@ def run_rounds(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
     if mode == "scan":
         fn = jax.jit(
             lambda c, x: jax.lax.scan(body, c, x, unroll=_SCAN_UNROLL))
-        if timers is not None:
+        if checkpoint_dir is not None:
+            carry, out, _ = _run_scan_checkpointed(
+                fn, carry, scan_xs, T, checkpoint_dir, checkpoint_every,
+                resume=resume, resume_step=resume_step,
+                stop_after=stop_after, cfg=cfg, scenario=scenario,
+                strategy_name=get_strategy(cfg.strategy).name)
+        elif timers is not None:
             with timers.phase("trace_compile"):
                 fn = fn.lower(carry, scan_xs).compile()
             with timers.phase("execute"):
@@ -407,7 +599,9 @@ def run_rounds(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
         raise ValueError(f"mode must be 'scan' or 'loop', got {mode!r}")
 
     history = {
-        "round": np.arange(1, T + 1),
+        # rounds actually run: == T except when stop_after killed the
+        # checkpointed run at a segment boundary (crash simulation).
+        "round": np.arange(1, int(loss.shape[0]) + 1),
         "train_loss": loss,
         "test_acc": acc,
         "final_params": consensus,

@@ -1,0 +1,172 @@
+"""Scan-legal fault processes: crashes, dropout bursts, blackouts (§Faults).
+
+The paper's stated premise is that "a powerful server may not be
+available for parameter aggregation due to increased latency and server
+failures" — yet a reproduction with immortal cluster-heads never tests
+it.  This module makes node failure a *process* indexed by the round t,
+in the mold of `repro.sim.processes`: pure-jnp state transitions riding
+the engine's ``lax.scan`` carry, realized each round into a
+:class:`FaultView` the engine folds into the participation mask and the
+strategy recovery hooks (`Strategy.on_head_failure`).
+
+Three mechanisms compose (DESIGN.md §Faults):
+
+* **Markov crash/recovery chains** — each node is an independent 2-state
+  (up/down) Markov chain:
+
+      P(up → down) = p_crash,   P(down → up) = p_recover.
+
+  A *down* node neither transmits nor receives; when the down node is a
+  cluster-head (or the COTAF server) the strategy's
+  ``on_head_failure`` hook re-elects a surviving replacement.
+
+* **Correlated dropout bursts** — a global 2-state burst chain
+  (enter w.p. ``burst_prob``, exit w.p. ``burst_recover_prob``); while a
+  burst is active each client is silenced i.i.d. w.p. ``burst_frac``.
+  Unlike the per-client i.i.d. dropout of `repro.sim.scheduling`, the
+  shared burst state correlates outages across clients and across rounds
+  (interference storms, backhaul congestion).
+
+* **Deep-fade blackouts** — w.p. ``deep_fade_prob`` a round starts a
+  blackout of ``deep_fade_rounds`` rounds during which NO client can
+  transmit; the engine's all-masked guard then freezes the consensus
+  (the round is skipped, exactly the physical behaviour of a fully
+  faded MAC).
+
+The **divergence guard** (``divergence_guard`` / ``quarantine_norm``) is
+not a channel process but a receiver-side defense the engine applies to
+the post-local-training parameter stacks: clients whose update is
+non-finite or whose per-channel-use power ‖θ‖²/d exceeds
+``quarantine_norm`` are *quarantined* — their transmit-mask entry is
+zeroed (so the mask-aware renormalization excludes them, same path as
+scheduling absences) and their poisoned parameters are replaced by their
+own pre-round params.  The replacement matters: a masked client still
+contributes ``0 × θ_k`` terms to the OTA matmuls, and ``0 × NaN = NaN``
+— masking alone cannot stop a poisoned transmit from NaN-ing the
+consensus (:func:`quarantine_mask` + the engine's ``_tree_where`` fold).
+
+Everything is a NamedTuple pytree / pure jnp so it scans and vmaps; a
+config with :attr:`FaultConfig.is_trivial` adds ZERO traced ops to the
+engine (static-flag discipline — same contract as telemetry).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Knobs of the round-indexed fault process (all off ⇒ no faults)."""
+
+    crash_prob: float = 0.0          # P(up → down) per node per round
+    recover_prob: float = 0.0        # P(down → up) per node per round
+    burst_prob: float = 0.0          # P(calm → burst) per round
+    burst_recover_prob: float = 0.0  # P(burst → calm) per round
+    burst_frac: float = 0.0          # P(client silenced | burst active)
+    deep_fade_prob: float = 0.0      # P(blackout starts) per round
+    deep_fade_rounds: int = 1        # blackout length (rounds)
+    divergence_guard: bool = False   # quarantine poisoned client updates
+    quarantine_norm: float = 0.0     # ‖θ‖²/d quarantine threshold (0 = only
+                                     # non-finite updates are quarantined)
+
+    @property
+    def is_trivial(self) -> bool:
+        """True when every mechanism is off ⇒ the engine skips fault
+        plumbing entirely (byte-identical jaxpr to a faultless build)."""
+        return (self.crash_prob <= 0.0 and self.burst_prob <= 0.0
+                and self.deep_fade_prob <= 0.0
+                and not self.divergence_guard)
+
+
+class FaultState(NamedTuple):
+    """Scan-carried state of the fault process."""
+
+    node_up: jnp.ndarray    # (K,) float {0,1}: Markov up/down per node
+    burst: jnp.ndarray      # () float {0,1}: dropout burst active
+    fade_left: jnp.ndarray  # () float: blackout rounds remaining
+
+
+class FaultView(NamedTuple):
+    """One round's realized faults — what the engine folds in."""
+
+    alive: jnp.ndarray      # (K,) {0,1} node up (crashed nodes are 0)
+    tx_ok: jnp.ndarray      # (K,) {0,1} can transmit: alive ∧ ¬burst ∧ ¬fade
+    burst: jnp.ndarray      # () {0,1} dropout burst active this round
+    deep_fade: jnp.ndarray  # () {0,1} blackout active this round
+
+
+def init_faults(cfg: FaultConfig, num_clients: int) -> FaultState:
+    """Everyone up, no burst, no blackout at round 0."""
+    del cfg
+    return FaultState(node_up=jnp.ones((num_clients,), jnp.float32),
+                      burst=jnp.zeros((), jnp.float32),
+                      fade_left=jnp.zeros((), jnp.float32))
+
+
+def step_faults(state: FaultState, cfg: FaultConfig,
+                key: jax.Array) -> Tuple[FaultState, FaultView]:
+    """Advance every fault chain one round (pure; scan-body safe)."""
+    K = state.node_up.shape[0]
+    k_crash, k_recover, k_enter, k_exit, k_hit, k_fade = jax.random.split(
+        key, 6)
+
+    # Per-node 2-state Markov chain.
+    crash = jax.random.bernoulli(k_crash, cfg.crash_prob, (K,))
+    recover = jax.random.bernoulli(k_recover, cfg.recover_prob, (K,))
+    up = jnp.where(state.node_up > 0,
+                   jnp.where(crash, 0.0, 1.0),
+                   jnp.where(recover, 1.0, 0.0))
+
+    # Global burst chain + i.i.d. per-client hits while active.
+    enter = jax.random.bernoulli(k_enter, cfg.burst_prob)
+    leave = jax.random.bernoulli(k_exit, cfg.burst_recover_prob)
+    burst = jnp.where(state.burst > 0,
+                      jnp.where(leave, 0.0, 1.0),
+                      jnp.where(enter, 1.0, 0.0))
+    hit = jax.random.bernoulli(k_hit, cfg.burst_frac, (K,)).astype(
+        jnp.float32)
+    burst_ok = 1.0 - burst * hit
+
+    # Deep-fade blackout: a countdown; a new blackout can only start once
+    # the previous one has fully drained.
+    fade_left = jnp.maximum(state.fade_left - 1.0, 0.0)
+    start = jax.random.bernoulli(k_fade, cfg.deep_fade_prob) & (
+        fade_left <= 0.0)
+    fade_left = jnp.where(start, float(cfg.deep_fade_rounds), fade_left)
+    fading = (fade_left > 0.0).astype(jnp.float32)
+
+    tx_ok = up * burst_ok * (1.0 - fading)
+    new_state = FaultState(node_up=up, burst=burst, fade_left=fade_left)
+    view = FaultView(alive=up, tx_ok=tx_ok, burst=burst, deep_fade=fading)
+    return new_state, view
+
+
+def quarantine_mask(stacked, limit: float = 0.0) -> jnp.ndarray:
+    """(K,) {0,1} health flag per client of a K-stacked pytree: 1 iff the
+    client's update is entirely finite and (when ``limit > 0``) its
+    per-channel-use power ‖θ_k‖²/d stays under ``limit``.
+
+    The power criterion reuses eq. (5)'s own estimator
+    (`cwfl.per_client_mean_sq`) so "exploding" means exploding *in the
+    quantity the precoder would try to transmit*.  Division of an inf
+    norm by d yields inf, and any NaN leaf propagates NaN — both compare
+    unhealthy, so the finite check alone already catches them; the
+    explicit ``isfinite`` reduction keeps the flag well-defined even at
+    ``limit = 0``.
+    """
+    from repro.core.cwfl import per_client_mean_sq
+
+    leaves = jax.tree.leaves(stacked)
+    rows = leaves[0].shape[0]
+    finite = jnp.ones((rows,), bool)
+    for x in leaves:
+        finite &= jnp.all(jnp.isfinite(x.astype(jnp.float32)
+                                       .reshape(rows, -1)), axis=1)
+    ok = finite
+    if limit > 0.0:
+        ok &= per_client_mean_sq(stacked) <= limit
+    return ok.astype(jnp.float32)

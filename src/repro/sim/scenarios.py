@@ -25,12 +25,20 @@ Registry (see DESIGN.md §Sim for the math behind each knob):
 * ``cluster-churn``   — fading + mobility strong enough that the SNR
   landscape drifts, with periodic on-device re-clustering every 5 rounds
   (K-means + head election inside the scan, `lax.cond`-gated).
+* ``head-failure``    — the paper's stated failure mode: Markov
+  crash/recovery chains on every node (`repro.sim.faults`), so cluster
+  heads / the COTAF server die mid-run and the strategy's
+  ``on_head_failure`` handoff re-elects survivors.
+* ``flaky-clients``   — the chaos kitchen sink: crashes, correlated
+  dropout bursts, deep-fade blackouts AND scheduled i.i.d. dropout, with
+  the divergence guard quarantining poisoned updates.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional, Tuple
 
+from repro.sim.faults import FaultConfig
 from repro.sim.processes import ChannelProcessConfig
 from repro.sim.scheduling import ScheduleConfig
 from repro.strategies import get_strategy
@@ -41,6 +49,7 @@ class Scenario:
     name: str = "paper-static"
     channel: ChannelProcessConfig = ChannelProcessConfig()
     schedule: ScheduleConfig = ScheduleConfig()
+    faults: FaultConfig = FaultConfig()   # node crash/burst/blackout process
     recluster_every: int = 0              # re-run clustering every n rounds (0=never)
     snr_grid: Tuple[float, ...] = ()      # Monte-Carlo SNR axis (dB); () = cfg.snr_db
     #: Default strategy for this scenario, resolved through the
@@ -53,7 +62,7 @@ class Scenario:
     def is_static(self) -> bool:
         """True ⇒ the engine takes the bit-exact paper-static fast path."""
         return (not self.channel.is_dynamic and self.schedule.is_trivial
-                and self.recluster_every <= 0)
+                and self.faults.is_trivial and self.recluster_every <= 0)
 
     def default_strategy(self, fallback: str = "cwfl"):
         """The scenario's preferred `Strategy` object (registry-resolved),
@@ -85,6 +94,17 @@ SCENARIOS = {
         channel=ChannelProcessConfig(fading_rho=0.95, speed=4.0,
                                      shadowing_std_db=2.0),
         recluster_every=5),
+    "head-failure": Scenario(
+        name="head-failure",
+        faults=FaultConfig(crash_prob=0.15, recover_prob=0.3)),
+    "flaky-clients": Scenario(
+        name="flaky-clients",
+        schedule=ScheduleConfig(dropout_prob=0.1),
+        faults=FaultConfig(crash_prob=0.05, recover_prob=0.5,
+                           burst_prob=0.2, burst_recover_prob=0.5,
+                           burst_frac=0.5, deep_fade_prob=0.05,
+                           deep_fade_rounds=2, divergence_guard=True,
+                           quarantine_norm=100.0)),
 }
 
 

@@ -262,7 +262,13 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
                               cfg: FLConfig,
                               scenario: Optional[Scenario] = None,
                               mesh=None,
-                              telemetry: bool = False) -> dict[str, Any]:
+                              telemetry: bool = False,
+                              checkpoint_dir: Optional[str] = None,
+                              checkpoint_every: int = 0,
+                              resume: bool = False,
+                              resume_step: Optional[int] = None,
+                              stop_after: Optional[int] = None
+                              ) -> dict[str, Any]:
     """One trajectory with the stacked K-client axis sharded over a
     ``("clients",)`` mesh: per-rank local training (vmap over K/n local
     clients) + the `psum`-riding CWFL sync, scanned over rounds.
@@ -279,10 +285,25 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
     losses ride one extra tiny ``psum`` (membership-sliced (C, K') @
     local losses), everything else falls out of the sync's own
     replicated internals (`_client_sharded_sync`'s extras).
+
+    ``checkpoint_dir``/``checkpoint_every``/``resume``/``resume_step``/
+    ``stop_after``: chunked checkpoint/resume with the same contract as
+    `engine.run_rounds` — the scan is split into segments and the full
+    carry (sharded param/opt stacks gathered to host, consensus, ledger)
+    is persisted at each boundary, manifest-stamped (the manifest's
+    strategy field carries an ``@clients`` suffix so sharded and
+    unsharded checkpoints — equal only to psum-reassociation ulps —
+    can never be spliced).  With checkpointing off the traced
+    computation is byte-identical to before (static-flag discipline).
     """
-    from repro.sim.engine import _build
+    from repro.sim.engine import _build, checkpoint_manifest
 
     scenario = scenario or Scenario()
+    ckpt = checkpoint_dir is not None
+    if not ckpt and (resume or stop_after is not None):
+        raise ValueError(
+            "resume/stop_after need checkpoint_dir — there is nothing to "
+            "restore from or checkpoint into")
     if not scenario.is_static:
         raise NotImplementedError(
             "shard='clients' supports static scenarios only (dynamic "
@@ -327,7 +348,10 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
         strategy.channel_uses(K, num_clusters=cfg.num_clusters),
         jnp.float32)
 
-    def traj(stacked0, opt0, cons0, xs_l, ys_l, rkeys):
+    def traj(stacked0, opt0, cons0, xs_l, ys_l, rkeys, *extra):
+        # extra = (ledger0,) on the checkpointed telemetry path — the
+        # cumulative channel-use ledger must survive a resume, so it
+        # becomes an explicit input instead of a closure-side init.
         r = jax.lax.axis_index("clients")
 
         def body(carry, rkey):
@@ -374,13 +398,18 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
             return (new, opt, consensus, new_ledger), (loss, acc, tele)
 
         if telemetry:
-            (_, _, final, _), out = jax.lax.scan(
-                body, (stacked0, opt0, cons0, init_ledger()), rkeys,
+            ledger0 = extra[0] if extra else init_ledger()
+            (st_f, opt_f, final, ledger_f), out = jax.lax.scan(
+                body, (stacked0, opt0, cons0, ledger0), rkeys,
                 unroll=_SCAN_UNROLL)
             loss, acc, tele = out
+            if ckpt:
+                return loss, acc, final, tele, st_f, opt_f, ledger_f
             return loss, acc, final, tele
-        (_, _, final), (loss, acc) = jax.lax.scan(
+        (st_f, opt_f, final), (loss, acc) = jax.lax.scan(
             body, (stacked0, opt0, cons0), rkeys, unroll=_SCAN_UNROLL)
+        if ckpt:
+            return loss, acc, final, st_f, opt_f
         return loss, acc, final
 
     # Specs come from the dist rules layer: leading K over "clients" for
@@ -388,6 +417,9 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
     k_spec = lambda tree: client_specs(jax.eval_shape(lambda t: t, tree),
                                        mesh)
     rep = lambda tree: jax.tree.map(lambda _: P(), tree)
+    ledger0 = init_ledger() if telemetry else None
+    in_specs: tuple = (k_spec(stacked), k_spec(opt_state), rep(params0),
+                       P("clients"), P("clients"), P())
     out_specs: tuple = (P(), P(), rep(params0))
     if telemetry:
         # Every telemetry value is psum-replicated or a rank-constant —
@@ -398,20 +430,35 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
             reclustered=P(),
             extras={k: P() for k in _CLIENT_TELE_EXTRAS})
         out_specs = out_specs + (tele_spec,)
+    if ckpt:
+        out_specs = out_specs + (k_spec(stacked), k_spec(opt_state))
+        if telemetry:
+            in_specs = in_specs + (rep(ledger0),)
+            out_specs = out_specs + (rep(ledger0),)
     f = shard_map(
         traj, mesh=mesh,
-        in_specs=(k_spec(stacked), k_spec(opt_state), rep(params0),
-                  P("clients"), P("clients"), P()),
+        in_specs=in_specs,
         out_specs=out_specs,
         check_rep=False)   # scan+psum bodies defeat the rep checker
-    out = jax.jit(f)(stacked, opt_state, params0, xs, ys, round_keys)
-    if telemetry:
-        loss, acc, consensus, tele = out
+    fj = jax.jit(f)
+
+    tele = None
+    if not ckpt:
+        out = fj(stacked, opt_state, params0, xs, ys, round_keys)
+        if telemetry:
+            loss, acc, consensus, tele = out
+        else:
+            loss, acc, consensus = out
     else:
-        loss, acc, consensus = out
+        loss, acc, consensus, tele = _client_sharded_checkpointed(
+            fj, stacked, opt_state, params0, ledger0, xs, ys, round_keys,
+            T, cfg, scenario, strategy, telemetry=telemetry,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            resume=resume, resume_step=resume_step, stop_after=stop_after,
+            manifest_fn=checkpoint_manifest)
 
     history = {
-        "round": np.arange(1, T + 1),
+        "round": np.arange(1, int(loss.shape[0]) + 1),
         "train_loss": loss,
         "test_acc": acc,
         "final_params": consensus,
@@ -421,3 +468,93 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
     if telemetry:
         history["telemetry"] = tele
     return history
+
+
+def _client_sharded_checkpointed(fj, stacked, opt_state, params0, ledger0,
+                                 xs, ys, round_keys, T: int, cfg, scenario,
+                                 strategy, *, telemetry: bool,
+                                 checkpoint_dir, checkpoint_every: int,
+                                 resume: bool, resume_step, stop_after,
+                                 manifest_fn):
+    """Segment driver for the checkpointed client-sharded trajectory —
+    the `engine._run_scan_checkpointed` contract on the shard_map path:
+    run ``checkpoint_every``-round chunks, persist the full carry +
+    accumulated metrics at each boundary, restore and continue on
+    ``resume`` (bitwise — the chunked scan is the same per-round body).
+    """
+    from pathlib import Path
+
+    from repro.checkpoint import (latest_step, load_checkpoint,
+                                  save_checkpoint)
+
+    directory = Path(checkpoint_dir)
+    every = (T if checkpoint_every is None or int(checkpoint_every) <= 0
+             else min(int(checkpoint_every), T))
+    # "@clients" keys the manifest hash: sharded and unsharded histories
+    # agree only to psum-reassociation ulps — never splice them.
+    manifest_fn(directory, cfg, scenario, strategy.name + "@clients",
+                resume)
+
+    def call(st, opt, cons, ld, keys):
+        args = (st, opt, cons, xs, ys, keys)
+        if telemetry:
+            args = args + (ld,)
+        return fj(*args)
+
+    def out_template(n):
+        # Abstract-evaluate the jitted shard_map fn for an n-round chunk:
+        # the (loss, acc[, telemetry]) accumulator template for resume.
+        args = (stacked, opt_state, params0, xs, ys, round_keys[:n])
+        if telemetry:
+            args = args + (ledger0,)
+        shapes = jax.eval_shape(fj, *args)
+        sub = ((shapes[0], shapes[1], shapes[3]) if telemetry
+               else (shapes[0], shapes[1]))
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sub)
+
+    st, opt, cons, ld = stacked, opt_state, params0, ledger0
+    start, acc_out = 0, None
+    if resume:
+        step = (resume_step if resume_step is not None
+                else latest_step(directory))
+        if step is None:
+            raise FileNotFoundError(
+                f"resume: no checkpoint steps in {directory}")
+        if not 0 < step <= T:
+            raise ValueError(
+                f"resume: checkpoint step {step} outside this run's "
+                f"1..{T} round range")
+        template = {"stacked": stacked, "opt": opt_state,
+                    "consensus": params0, "out": out_template(step)}
+        if telemetry:
+            template["ledger"] = ledger0
+        payload = load_checkpoint(directory, template, step=step)
+        st, opt, cons = (payload["stacked"], payload["opt"],
+                         payload["consensus"])
+        ld = payload.get("ledger", ledger0)
+        acc_out, start = payload["out"], int(step)
+
+    pos = start
+    while pos < T:
+        end = min(pos + every, T)
+        res = call(st, opt, cons, ld, round_keys[pos:end])
+        if telemetry:
+            loss_s, acc_s, cons, tele_s, st, opt, ld = res
+            seg = (loss_s, acc_s, tele_s)
+        else:
+            loss_s, acc_s, cons, st, opt = res
+            seg = (loss_s, acc_s)
+        acc_out = seg if acc_out is None else jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), acc_out, seg)
+        pos = end
+        payload = {"stacked": st, "opt": opt, "consensus": cons,
+                   "out": acc_out}
+        if telemetry:
+            payload["ledger"] = ld
+        save_checkpoint(directory, pos, payload)
+        if stop_after is not None and pos >= int(stop_after) and pos < T:
+            break
+
+    if telemetry:
+        return acc_out[0], acc_out[1], cons, acc_out[2]
+    return acc_out[0], acc_out[1], cons, None

@@ -90,7 +90,7 @@ class Strategy:
         raise NotImplementedError
 
     def state_from_view(self, state0: State, view, noise_var, *,
-                        csi=None, mask=None, plan=None) -> State:
+                        csi=None, mask=None, plan=None, alive=None) -> State:
         """Rebuild the round state from a channel view — the scan-legal
         per-round half of :meth:`init` (pure jnp; ``noise_var`` may be a
         tracer).
@@ -102,30 +102,64 @@ class Strategy:
         optional (K,) {0,1} participation — only graph-based strategies
         (:attr:`needs_graph`) fold it here, by pruning edges; everyone
         else folds it in :meth:`aggregate`; ``plan``: optional
-        re-clustered plan (:meth:`recluster`) replacing ``state0``'s.
+        re-clustered plan (:meth:`recluster`) replacing ``state0``'s;
+        ``alive``: optional (K,) {0,1} node-up vector (fault scenarios,
+        DESIGN.md §Faults) — distinct from ``mask`` (a fading/scheduling
+        absence is transient; a *dead* node cannot serve as a receiver),
+        strategies with infrastructure roles fail them over here (COTAF
+        re-elects its server).  ``alive=None`` must trace a byte-identical
+        jaxpr to the pre-fault protocol.
         """
         raise NotImplementedError
 
-    def aggregate(self, stacked_params, state: State, key, mask=None):
+    def aggregate(self, stacked_params, state: State, key, mask=None,
+                  alive=None):
         """One sync round on a K-stacked pytree.  Returns
         ``(new_stacked_params, consensus)``.  ``mask`` is the raw (K,)
         {0,1} participation (transmit side; forced-present rules are the
         strategy's own business) — strategies that already folded it into
         ``state`` (see :meth:`state_from_view`) ignore it here.
+        ``alive`` is the fault plane's (K,) node-up vector: unlike a
+        masked-out client, a dead node is also no *receiver*, so
+        strategies must additionally kill dead aggregation rows (CWFL's
+        dead-cluster guard) and engage their numeric guards
+        (``alive is not None`` ⇒ quarantined-NaN containment).
         """
         raise NotImplementedError
 
-    def receive_mask(self, state: State, mask):
+    def receive_mask(self, state: State, mask, alive=None):
         """(K,) effective *receive*-side participation for one masked
         round: which clients adopt the broadcast aggregate (1) vs keep
         their locally-trained params (0).  Nodes the aggregation forces
         present (CWFL cluster-heads, the COTAF server — they *hold* the
-        aggregate) must stay 1 even when masked out.  Return ``None``
-        when the aggregate already encodes absences (decentralized:
-        isolated nodes get ``W(k,k)=1``) — the engine then applies no
+        aggregate) must stay 1 even when masked out.  ``alive`` limits
+        that forcing to nodes that are actually up — a *crashed* head
+        holds nothing (DESIGN.md §Faults).  Return ``None`` when the
+        aggregate already encodes absences (decentralized: isolated
+        nodes get ``W(k,k)=1``) — the engine then applies no
         receive-side fold at all.
         """
+        del alive
         return mask
+
+    def on_head_failure(self, state0: State, plan, view, alive, key):
+        """Fault-plane handoff hook: repair the round's infrastructure
+        assignment after node crashes, *before* :meth:`state_from_view`
+        rebuilds the round state (DESIGN.md §Faults).
+
+        ``plan`` is the round's current cluster plan (the `lax.cond`
+        recluster output, or ``None`` for strategies without one);
+        ``alive`` the (K,) {0,1} node-up vector.  Only called on the
+        fault path (never when ``Scenario.faults.is_trivial``), every
+        round — implementations must be scan-legal pure jnp and cheap
+        when nothing failed.  Default: no infrastructure to repair —
+        return ``plan`` unchanged.  CWFL re-elects dead cluster-heads
+        (`repro.core.clustering.reelect_heads`); COTAF's server failover
+        rides :meth:`state_from_view` instead (its server is re-derived
+        from gains each round anyway).
+        """
+        del state0, view, alive, key
+        return plan
 
     def recluster(self, view, num_clusters: int, key):
         """Re-derive the cluster plan from a channel view (only called

@@ -48,20 +48,34 @@ class CWFLStrategy(Strategy):
             key)
 
     def state_from_view(self, state0, view, noise_var, *,
-                        csi=None, mask=None, plan=None):
-        del mask   # folded into the round coefficients by aggregate()
+                        csi=None, mask=None, plan=None, alive=None):
+        del mask, alive   # folded into the round coefficients by aggregate()
         return cwfl.state_from_plan(
             state0.plan if plan is None else plan,
             view.link_gain, state0.total_power, noise_var, csi_perturb=csi)
 
-    def aggregate(self, stacked_params, state, key, mask=None):
-        return cwfl.aggregate(stacked_params, state, key, mask=mask)
+    def aggregate(self, stacked_params, state, key, mask=None, alive=None):
+        # alive engages the dead-cluster row guard in round_coefficients
+        # AND the NaN-containment guard in the fused round (a quarantined
+        # client's poisoned signal must not reach the MAC matmul).
+        return cwfl.aggregate(stacked_params, state, key, mask=mask,
+                              alive=alive, guard=alive is not None)
 
-    def receive_mask(self, state, mask):
+    def receive_mask(self, state, mask, alive=None):
         # Heads are forced present on the transmit side — they ARE the
         # phase-1/2 receivers — so they also keep the aggregate they
-        # computed rather than revert to their local params.
-        return cwfl.participation_weights(state, mask)
+        # computed rather than revert to their local params.  A *crashed*
+        # head holds nothing: alive limits the forcing.
+        return cwfl.participation_weights(state, mask, alive=alive)
+
+    def on_head_failure(self, state0, plan, view, alive, key):
+        # Handoff rule (DESIGN.md §Faults): keep live heads; a dead head
+        # is replaced by the surviving member with the best within-cluster
+        # aggregate link SNR.  Stateless — derived fresh each round from
+        # the base plan + alive, so a recovered head resumes automatically.
+        del key
+        return cl.reelect_heads(state0.plan if plan is None else plan,
+                                view.link_snr, alive)
 
     def recluster(self, view, num_clusters: int, key):
         return cl.make_cluster_plan(view.link_snr, view.adjacency,
@@ -130,18 +144,26 @@ class COTAFStrategy(Strategy):
         return baselines.cotaf_setup(topology, key, snr_db=snr_db)
 
     def state_from_view(self, state0, view, noise_var, *,
-                        csi=None, mask=None, plan=None):
+                        csi=None, mask=None, plan=None, alive=None):
         del mask, plan
+        # Server FAILOVER: selection argmaxes over surviving nodes only,
+        # so a crashed server hands the role to the best live node.
         return baselines.cotaf_state_from_gains(
-            view.link_gain, state0.total_power, noise_var, csi_perturb=csi)
+            view.link_gain, state0.total_power, noise_var, csi_perturb=csi,
+            alive=alive)
 
-    def aggregate(self, stacked_params, state, key, mask=None):
+    def aggregate(self, stacked_params, state, key, mask=None, alive=None):
+        del alive   # failover happened in state_from_view; dead nodes are
+        # already masked off the MAC by the engine's tx fold.
         return baselines.cotaf_aggregate(stacked_params, state, key,
                                          mask=mask)
 
-    def receive_mask(self, state, mask):
+    def receive_mask(self, state, mask, alive=None):
         # Same receiver rule as CWFL heads: the server holds the
-        # aggregate, so it keeps it.
+        # aggregate, so it keeps it.  Failover already guarantees the
+        # server is alive whenever any node is, so alive needs no extra
+        # fold here.
+        del alive
         return baselines.cotaf_participation(state, mask)
 
     def channel_uses(self, num_clients, num_clusters=None,
@@ -177,12 +199,12 @@ class FedAvgStrategy(Strategy):
         return None
 
     def state_from_view(self, state0, view, noise_var, *,
-                        csi=None, mask=None, plan=None):
-        del state0, view, noise_var, csi, mask, plan
+                        csi=None, mask=None, plan=None, alive=None):
+        del state0, view, noise_var, csi, mask, plan, alive
         return None
 
-    def aggregate(self, stacked_params, state, key, mask=None):
-        del state, key
+    def aggregate(self, stacked_params, state, key, mask=None, alive=None):
+        del state, key, alive   # dead nodes arrive masked (engine tx fold)
         return baselines.fedavg_aggregate(stacked_params, weights=mask)
 
 
@@ -196,11 +218,12 @@ class DecentralizedStrategy(Strategy):
         return baselines.decentralized_setup(topology, key, snr_db=snr_db)
 
     def state_from_view(self, state0, view, noise_var, *,
-                        csi=None, mask=None, plan=None):
-        del csi, plan
+                        csi=None, mask=None, plan=None, alive=None):
+        del csi, plan, alive   # dead nodes arrive masked (engine tx fold)
         # Absence is graph pruning, not MAC masking: Metropolis weights
-        # give isolated (absent) nodes W(k,k)=1, so they keep their
-        # parameters with zero noise.
+        # give isolated (absent/crashed) nodes W(k,k)=1, so they keep
+        # their parameters with zero noise — re-Metropolization over the
+        # pruned graph IS the decentralized fault handoff.
         adj = view.adjacency
         if mask is not None:
             mb = mask > 0
@@ -208,13 +231,14 @@ class DecentralizedStrategy(Strategy):
         return baselines.decentralized_state_from_graph(
             adj, state0.total_power, noise_var)
 
-    def aggregate(self, stacked_params, state, key, mask=None):
-        del mask   # already pruned into the Metropolis graph
+    def aggregate(self, stacked_params, state, key, mask=None, alive=None):
+        del mask, alive   # already pruned into the Metropolis graph
         return baselines.decentralized_aggregate(stacked_params, state, key)
 
-    def receive_mask(self, state, mask):
+    def receive_mask(self, state, mask, alive=None):
         # The mixing matrix already encodes absences — no receive-side
         # fold (and no sync-skip guard) on top.
+        del alive
         return None
 
     def channel_uses(self, num_clients, num_clusters=None,

@@ -1,0 +1,82 @@
+"""repro.checkpoint: pytree save/load, bf16 bit-exact wire format, errors.
+
+The resume-determinism contract of ``run_rounds`` (DESIGN.md §Faults)
+reduces to this layer restoring every carry leaf bit-exactly — including
+bfloat16, which ``np.savez`` cannot serialize natively and which a
+float32 detour would silently round-trip through a value conversion.
+"""
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+
+
+def _tree(dtype=jnp.float32):
+    k = jax.random.PRNGKey(0)
+    return {
+        "w": jax.random.normal(k, (4, 3), jnp.float32).astype(dtype),
+        "b": jnp.arange(3, dtype=jnp.float32).astype(dtype),
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip_f32_bitwise(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 3, t)
+    r = load_checkpoint(tmp_path, jax.tree.map(jnp.zeros_like, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_roundtrip_bf16_bitwise(tmp_path):
+    """bf16 rides the wire as raw uint16 bit patterns (tree.json records
+    the true dtype) — the restore must be a view, not a value cast."""
+    t = _tree(jnp.bfloat16)
+    t["w"] = t["w"].at[0, 0].set(jnp.asarray(3.0e38, jnp.bfloat16))
+    save_checkpoint(tmp_path, 0, t)
+    r = load_checkpoint(tmp_path, jax.tree.map(jnp.zeros_like, t))
+    assert r["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(t["w"]).view(np.uint16),
+        np.asarray(r["w"]).view(np.uint16))
+    # and the npz itself holds uint16, so numpy alone can read it back
+    import numpy.lib.npyio  # noqa: F401  (documents the plain-npz claim)
+    raw = np.load(tmp_path / "step_00000000" / "arrays.npz")
+    assert raw["w"].dtype == np.uint16
+    assert np.asarray(r["w"]).view(np.uint16).tolist() == raw["w"].tolist()
+    assert raw["w"].view(ml_dtypes.bfloat16).dtype == ml_dtypes.bfloat16
+
+
+def test_latest_step_and_explicit_step(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 1, t)
+    save_checkpoint(tmp_path, 4, jax.tree.map(lambda x: x + 1, t))
+    assert latest_step(tmp_path) == 4
+    r1 = load_checkpoint(tmp_path, t, step=1)
+    r4 = load_checkpoint(tmp_path, t)
+    np.testing.assert_array_equal(np.asarray(r1["b"]), np.asarray(t["b"]))
+    np.testing.assert_array_equal(np.asarray(r4["b"]),
+                                  np.asarray(t["b"]) + 1)
+
+
+def test_missing_checkpoint_errors_name_the_location(tmp_path):
+    with pytest.raises(FileNotFoundError, match=str(tmp_path)):
+        load_checkpoint(tmp_path, _tree())
+    # a step dir that exists but was never completed (no arrays.npz)
+    (tmp_path / "step_00000002").mkdir()
+    with pytest.raises(FileNotFoundError, match="step_00000002"):
+        load_checkpoint(tmp_path, _tree(), step=2)
+
+
+def test_template_mismatch_errors_name_leaf_and_dir(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 5, t)
+    bad_shape = dict(t, w=jnp.zeros((2, 2), jnp.float32))
+    with pytest.raises(ValueError, match=r"w.*step_00000005"):
+        load_checkpoint(tmp_path, bad_shape, step=5)
+    bad_tree = dict(t, extra=jnp.zeros(()))
+    with pytest.raises(KeyError, match="extra"):
+        load_checkpoint(tmp_path, bad_tree, step=5)

@@ -187,6 +187,36 @@ def test_cwfl_round_auto_routes_by_dim(monkeypatch):
     assert kernel_dims == [4096]   # small d stayed on the jnp reference
 
 
+def test_cwfl_round_guard_quarantined_cluster_bitexact():
+    """Fault guard (DESIGN.md §Faults): NaN-poisoned signals plus an
+    entirely quarantined cluster (its Ã row zeroed by the alive-aware
+    coefficients) — the fused kernel matches the guarded reference
+    bit-for-bit and both stay finite where the unguarded round NaNs."""
+    K, C, d, tile = 8, 3, 1337, 512
+    s, a, n1, b, n2, m = _round_inputs(K, C, d, seed=11)
+    s = s.at[2].set(jnp.nan)                   # poisoned client update
+    a = a.at[1].set(0.0)                       # cluster 1: zero survivors
+    new, cons = cwfl_round(s, a, n1, b, n2, m, tile=tile, guard=True)
+    rnew, rcons = cwfl_round_ref(s, a, n1, b, n2, m, guard=True)
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(rnew))
+    np.testing.assert_array_equal(np.asarray(cons), np.asarray(rcons))
+    assert np.isfinite(np.asarray(new)).all()
+    assert np.isfinite(np.asarray(cons)).all()
+    # sanity: without the guard the poison reaches every output
+    unew, _ = cwfl_round_ref(s, a, n1, b, n2, m)
+    assert np.isnan(np.asarray(unew)).any()
+
+
+def test_cwfl_round_guard_noop_on_healthy_inputs():
+    """With finite signals and no dead rows the guard's wheres are
+    identities — guarded and unguarded rounds agree bit-for-bit."""
+    s, a, n1, b, n2, m = _round_inputs(8, 3, 700, seed=5)
+    new, cons = cwfl_round(s, a, n1, b, n2, m, tile=256)
+    gnew, gcons = cwfl_round(s, a, n1, b, n2, m, tile=256, guard=True)
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(gnew))
+    np.testing.assert_array_equal(np.asarray(cons), np.asarray(gcons))
+
+
 @pytest.mark.parametrize("B,H,KV,S,D", [
     (1, 2, 1, 100, 32), (2, 6, 2, 64, 64),
     pytest.param(2, 4, 2, 256, 64, marks=pytest.mark.slow),
