@@ -1,0 +1,156 @@
+"""Bench regression gate: compare a fresh BENCH_*.json against a baseline.
+
+    python benchmarks/compare.py BENCH_sim.json /tmp/fresh_sim.json \
+        --max-regression 0.75 --markdown delta.md
+
+Walks the benchmark entries both files share and gates three ways:
+
+* **throughput** (higher-better: ``rounds_per_sec``, ``traj_per_sec``,
+  ``mc_rounds_per_sec``) and **latency** (lower-better: ``us``) regress
+  when the fresh value is worse than baseline by more than
+  ``--max-regression`` (a ratio; the default 0.5 = 50% tolerates this
+  hardware's run-to-run noise, CI uses a still-looser gate — these
+  benches share cores with the rest of the job);
+* **deterministic** fields (``modeled_hbm_bytes``, ``jaxpr_identical``,
+  ``bitwise_equal_vs_vmap``) must match EXACTLY — a drifted byte model
+  or a lost bitwise-equality invariant is a correctness bug no noise
+  argument excuses;
+* everything else (``compile_seconds``, ``speedup_*``, ``derived``,
+  phase splits) is reported in the delta table but never gates.
+
+Meta entries (``run_manifest``, ``throughput_vs_previous_file``) are
+provenance, not benchmarks, and are skipped.  Exit 0 = green, 1 = at
+least one gate tripped, 2 = usage error / nothing to compare (an empty
+intersection means the key sets drifted — that fails loudly rather than
+vacuously passing).  ``--markdown`` writes the delta table for a CI job
+summary.  Stdlib only.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+HIGHER_BETTER = ("rounds_per_sec", "traj_per_sec", "mc_rounds_per_sec")
+LOWER_BETTER = ("us",)
+EXACT = ("modeled_hbm_bytes", "jaxpr_identical", "bitwise_equal_vs_vmap")
+META_KEYS = ("run_manifest", "throughput_vs_previous_file")
+
+
+def compare(baseline: dict, fresh: dict, max_regression: float) -> dict:
+    """Compare two bench dicts; returns {rows, failures, matched}."""
+    rows, failures = [], []
+    matched = 0
+    for name in sorted(set(baseline) & set(fresh)):
+        if name in META_KEYS:
+            continue
+        b, f = baseline[name], fresh[name]
+        if not (isinstance(b, dict) and isinstance(f, dict)):
+            continue
+        matched += 1
+        for field in sorted(set(b) & set(f)):
+            bv, fv = b[field], f[field]
+            if field in EXACT:
+                ok = bv == fv
+                rows.append((name, field, bv, fv, "exact",
+                             "ok" if ok else "FAIL"))
+                if not ok:
+                    failures.append(f"{name}.{field}: baseline {bv!r} "
+                                    f"!= fresh {fv!r} (exact-match field)")
+            elif field in HIGHER_BETTER and _num(bv) and _num(fv):
+                ratio = fv / bv if bv else float("inf")
+                ok = fv >= bv * (1.0 - max_regression)
+                rows.append((name, field, bv, fv, f"{ratio:.2f}x",
+                             "ok" if ok else "FAIL"))
+                if not ok:
+                    failures.append(
+                        f"{name}.{field}: {fv:.2f} vs baseline {bv:.2f} "
+                        f"({ratio:.2f}x < allowed "
+                        f"{1.0 - max_regression:.2f}x)")
+            elif field in LOWER_BETTER and _num(bv) and _num(fv):
+                ratio = fv / bv if bv else float("inf")
+                ok = fv <= bv * (1.0 + max_regression)
+                rows.append((name, field, bv, fv, f"{ratio:.2f}x",
+                             "ok" if ok else "FAIL"))
+                if not ok:
+                    failures.append(
+                        f"{name}.{field}: {fv:.2f}us vs baseline "
+                        f"{bv:.2f}us ({ratio:.2f}x > allowed "
+                        f"{1.0 + max_regression:.2f}x)")
+            elif _num(bv) and _num(fv) and bv:
+                rows.append((name, field, bv, fv, f"{fv / bv:.2f}x",
+                             "info"))
+    return {"rows": rows, "failures": failures, "matched": matched}
+
+
+def _num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def markdown_table(result: dict, title: str) -> str:
+    lines = [f"### Bench delta: {title}", "",
+             "| bench | metric | baseline | fresh | ratio | gate |",
+             "|---|---|---:|---:|---:|---|"]
+    for name, field, bv, fv, ratio, status in result["rows"]:
+        mark = {"ok": "✅", "FAIL": "❌", "info": "—"}[status]
+        lines.append(f"| {name} | {field} | {_fmt(bv)} | {_fmt(fv)} "
+                     f"| {ratio} | {mark} |")
+    lines.append("")
+    if result["failures"]:
+        lines.append(f"**{len(result['failures'])} gate(s) tripped:**")
+        lines += [f"- {f}" for f in result["failures"]]
+    else:
+        lines.append(f"All gates green over {result['matched']} "
+                     f"matched benches.")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed baseline BENCH_*.json")
+    ap.add_argument("fresh", help="freshly generated BENCH_*.json")
+    ap.add_argument("--max-regression", type=float, default=0.5,
+                    help="allowed fractional throughput/latency "
+                         "regression (0.5 = 50%%)")
+    ap.add_argument("--markdown", default=None,
+                    help="write the delta table to this markdown file "
+                         "(CI job summary)")
+    ap.add_argument("--label", default=None,
+                    help="table title (default: the fresh path)")
+    args = ap.parse_args()
+
+    try:
+        with open(args.baseline) as fh:
+            baseline = json.load(fh)
+        with open(args.fresh) as fh:
+            fresh = json.load(fh)
+    except (OSError, ValueError) as e:
+        print(f"compare.py: cannot load inputs: {e}", file=sys.stderr)
+        return 2
+    if not (isinstance(baseline, dict) and isinstance(fresh, dict)):
+        print("compare.py: BENCH files must be JSON objects",
+              file=sys.stderr)
+        return 2
+
+    result = compare(baseline, fresh, args.max_regression)
+    table = markdown_table(result, args.label or args.fresh)
+    print(table)
+    if args.markdown:
+        with open(args.markdown, "w") as fh:
+            fh.write(table)
+    if result["matched"] == 0:
+        print("compare.py: no matched benchmark entries — key sets "
+              "drifted?", file=sys.stderr)
+        return 2
+    return 1 if result["failures"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,7 +17,11 @@ scaled):
 
 ``benchmarks/run.py --only sim`` persists the rows to ``BENCH_sim.json``
 (rounds/sec, scan-vs-loop speedup, MC + sharded throughput) so the speed
-trajectory is machine-comparable across PRs.
+trajectory is machine-comparable across PRs — gate a fresh file against
+the committed baseline with ``benchmarks/compare.py``.  Jitted rows are
+timed through an AOT trace/compile/execute split
+(`repro.obs.profiling.PhaseTimers`) recorded per-row as ``phases``;
+``compile_seconds`` is kept as trace+compile for baseline continuity.
 """
 from __future__ import annotations
 
@@ -37,6 +41,23 @@ def _median_time(fn, n: int = 3) -> float:
         fn()
         samples.append(time.perf_counter() - t0)
     return statistics.median(samples)
+
+
+def _aot_phases(jitted, *args):
+    """AOT-split a jitted callable via `repro.obs.profiling.PhaseTimers`:
+    trace (``lower``), compile, first execute — the split the hand-rolled
+    "compile + run" wall figure used to lump together.  Returns
+    ``(compiled, phases_dict)``; ``phases["trace"] + phases["compile"]``
+    is the old ``compile_seconds``."""
+    from repro.obs.profiling import PhaseTimers
+    timers = PhaseTimers()
+    with timers.phase("trace"):
+        lowered = jitted.lower(*args)
+    with timers.phase("compile"):
+        compiled = lowered.compile()
+    with timers.phase("execute"):
+        jax.block_until_ready(compiled(*args))
+    return compiled, timers.as_dict()
 
 
 def run(rounds: int = 8, mc_rounds: int = 3, seeds: int = 2,
@@ -78,11 +99,10 @@ def run(rounds: int = 8, mc_rounds: int = 3, seeds: int = 2,
     body = make_body(ctx)
 
     # --- scanned trajectory (one jit, no per-round host sync) -------------
-    scan_f = jax.jit(
-        lambda c, x: jax.lax.scan(body, c, x, unroll=_SCAN_UNROLL))
-    t0 = time.perf_counter()
-    jax.block_until_ready(scan_f(carry0, scan_xs))          # compile + run
-    scan_compile_s = time.perf_counter() - t0
+    scan_f, scan_phases = _aot_phases(
+        jax.jit(lambda c, x: jax.lax.scan(body, c, x,
+                                          unroll=_SCAN_UNROLL)),
+        carry0, scan_xs)
     scan_s = _median_time(
         lambda: jax.block_until_ready(scan_f(carry0, scan_xs)))
     scan_rps = rounds / scan_s
@@ -107,7 +127,9 @@ def run(rounds: int = 8, mc_rounds: int = 3, seeds: int = 2,
                             f"{speedup:.2f}x",
                  "rounds_per_sec": scan_rps,
                  "speedup_vs_loop": speedup,
-                 "compile_seconds": scan_compile_s,
+                 "compile_seconds": scan_phases["trace"]
+                                    + scan_phases["compile"],
+                 "phases": scan_phases,
                  "rounds": rounds})
     rows.append({"name": f"sim_loop_{tag}", "us": loop_s * 1e6,
                  "derived": f"rps={loop_rps:.2f}",
@@ -122,12 +144,11 @@ def run(rounds: int = 8, mc_rounds: int = 3, seeds: int = 2,
                                       yte, mc_cfg, Scenario(), tcfg)
     traj = make_trajectory_fn(mc_prepare, mc_make_body)
 
-    mc_f = jax.jit(jax.vmap(jax.vmap(traj, in_axes=(None, 0)),
-                            in_axes=(0, None)))
     seed_arr = jnp.arange(seeds)
-    t0 = time.perf_counter()
-    jax.block_until_ready(mc_f(seed_arr, grid))             # compile + run
-    mc_compile_s = time.perf_counter() - t0
+    mc_f, mc_phases = _aot_phases(
+        jax.jit(jax.vmap(jax.vmap(traj, in_axes=(None, 0)),
+                         in_axes=(0, None))),
+        seed_arr, grid)
     mc_s = _median_time(lambda: jax.block_until_ready(mc_f(seed_arr, grid)))
     n_traj = seeds * int(grid.shape[0])
     mc_rps = n_traj * mc_rounds / mc_s
@@ -137,7 +158,8 @@ def run(rounds: int = 8, mc_rounds: int = 3, seeds: int = 2,
                  "derived": f"traj={n_traj};mc_rps={mc_rps:.2f}",
                  "trajectories": n_traj,
                  "mc_rounds_per_sec": mc_rps,
-                 "compile_seconds": mc_compile_s,
+                 "compile_seconds": mc_phases["trace"] + mc_phases["compile"],
+                 "phases": mc_phases,
                  "snr_grid": np.asarray(grid).tolist(),
                  "rounds": mc_rounds})
 
@@ -152,19 +174,15 @@ def run(rounds: int = 8, mc_rounds: int = 3, seeds: int = 2,
     n_dev = next(n for n in (8, 4, 2, 1) if n <= len(jax.devices()))
     if n_dev > 1:
         seeds8 = jnp.arange(8)
-        vmap_f = jax.jit(jax.vmap(traj, in_axes=(0, None)))
-        t0 = time.perf_counter()
-        jax.block_until_ready(vmap_f(seeds8, 40.0))         # compile + run
-        vmap_compile_s = time.perf_counter() - t0
+        vmap_f, vmap_phases = _aot_phases(
+            jax.jit(jax.vmap(traj, in_axes=(0, None))), seeds8, 40.0)
         vmap_s = _median_time(
             lambda: jax.block_until_ready(vmap_f(seeds8, 40.0)))
 
         mesh = make_mc_mesh(n_dev)
-        shard_f = make_sharded_sweep_fn(traj, 8, mc_rounds, mesh,
-                                        snr_db=40.0)
-        t0 = time.perf_counter()
-        jax.block_until_ready(shard_f(seeds8))              # compile + run
-        shard_compile_s = time.perf_counter() - t0
+        shard_f, shard_phases = _aot_phases(
+            make_sharded_sweep_fn(traj, 8, mc_rounds, mesh, snr_db=40.0),
+            seeds8)
         shard_s = _median_time(
             lambda: jax.block_until_ready(shard_f(seeds8)))
 
@@ -176,7 +194,9 @@ def run(rounds: int = 8, mc_rounds: int = 3, seeds: int = 2,
                      "us": vmap_s * 1e6,
                      "derived": f"traj_per_sec={8 / vmap_s:.2f}",
                      "traj_per_sec": 8 / vmap_s,
-                     "compile_seconds": vmap_compile_s,
+                     "compile_seconds": vmap_phases["trace"]
+                                        + vmap_phases["compile"],
+                     "phases": vmap_phases,
                      "rounds": mc_rounds})
         rows.append({"name": f"sim_mc_sharded_S8_D{n_dev}_K{clients}"
                              f"_T{mc_rounds}",
@@ -188,6 +208,8 @@ def run(rounds: int = 8, mc_rounds: int = 3, seeds: int = 2,
                      "speedup_vs_vmap": traj_speedup,
                      "bitwise_equal_vs_vmap": bitwise,
                      "devices": n_dev,
-                     "compile_seconds": shard_compile_s,
+                     "compile_seconds": shard_phases["trace"]
+                                        + shard_phases["compile"],
+                     "phases": shard_phases,
                      "rounds": mc_rounds})
     return rows

@@ -30,6 +30,22 @@ channel-use ledger, strategy internals) and writes the run — manifest,
 per-round records, summary with phase wall timings — as a JSONL stream
 `examples/obs_report.py` renders to markdown.  ``--profile-dir DIR``
 additionally captures a TensorBoard-loadable ``jax.profiler`` trace.
+
+``--stream OUT.jsonl`` goes LIVE instead of post-hoc: the scan body
+drains every round to an append-mode JSONL while the run executes
+(`repro.obs.stream`) — tail it with ``examples/watch_run.py --follow``.
+``--alerts`` attaches the `repro.obs.monitor` rule engine (non-finite
+loss, consensus-drift blowup, quarantine rate, eq. (5) power budget,
+c/T convergence stall) whose alert records ride the same stream;
+``--abort-on-alert`` escalates any alert to a checkpoint-then-stop
+(requires ``--checkpoint-dir``; the aborted run resumes with
+``--resume``, its stream appending where it left off).  ``--prom
+OUT.prom`` additionally exports latest-round gauges as a
+Prometheus-style textfile.
+
+    PYTHONPATH=src python examples/run_scenario.py --stream live.jsonl \
+        --alerts &
+    PYTHONPATH=src python examples/watch_run.py live.jsonl --follow
 """
 from __future__ import annotations
 
@@ -75,6 +91,26 @@ def main() -> None:
                          "write the run as a JSONL stream — manifest, one "
                          "record per (trajectory, round), summary with "
                          "phase timings; render with examples/obs_report.py")
+    ap.add_argument("--stream", default=None, metavar="OUT.jsonl",
+                    help="LIVE telemetry: drain every round to this JSONL "
+                         "while the scan executes (repro.obs.stream); tail "
+                         "with examples/watch_run.py --follow. Implies the "
+                         "in-scan telemetry plane")
+    ap.add_argument("--alerts", action="store_true",
+                    help="attach the repro.obs.monitor rule engine to the "
+                         "stream; alert records ride the same JSONL "
+                         "(requires --stream)")
+    ap.add_argument("--abort-on-alert", action="store_true",
+                    help="escalate any alert to checkpoint-then-stop "
+                         "(requires --stream and --checkpoint-dir; resume "
+                         "with --resume). Implies --alerts")
+    ap.add_argument("--prom", default=None, metavar="OUT.prom",
+                    help="also export latest-round gauges as a "
+                         "Prometheus-style textfile (requires --stream)")
+    ap.add_argument("--alert-max-drift", type=float, default=100.0,
+                    help="ConsensusDriftRule absolute ceiling (default "
+                         "100.0; set tiny, e.g. 1e-9, to force an alert "
+                         "for chaos/CI testing)")
     ap.add_argument("--profile-dir", default=None,
                     help="capture a jax.profiler trace into this directory "
                          "(TensorBoard-loadable)")
@@ -159,15 +195,49 @@ def main() -> None:
                                         or args.stop_after is not None):
         ap.error("--resume/--stop-after need --checkpoint-dir")
 
-    telemetry = args.telemetry is not None
+    if (args.alerts or args.abort_on_alert or args.prom) and not args.stream:
+        ap.error("--alerts/--abort-on-alert/--prom ride the live stream; "
+                 "add --stream OUT.jsonl")
+    if args.abort_on_alert and args.checkpoint_dir is None:
+        ap.error("--abort-on-alert stops at a checkpoint boundary so the "
+                 "run stays resumable; add --checkpoint-dir (single "
+                 "trajectory only)")
+
+    telemetry = args.telemetry is not None or args.stream is not None
     # Checkpointed runs are multi-segment: phase timers stop meaning
     # anything (run_rounds refuses the combination), so drop them.
     timers = (PhaseTimers()
-              if telemetry and args.checkpoint_dir is None else None)
+              if args.telemetry is not None and args.checkpoint_dir is None
+              else None)
+
+    stream = None
+    manifest = None
+    if args.stream is not None:
+        from repro.obs import (JsonlStreamSink, Monitor, PrometheusSink,
+                               RoundStream, default_rules)
+        monitor = None
+        if args.alerts or args.abort_on_alert:
+            monitor = Monitor(default_rules(max_drift=args.alert_max_drift),
+                              abort_on_alert=args.abort_on_alert)
+        # Manifest first: a tailer picking up the file mid-run knows the
+        # config before the first round record lands.  --resume appends so
+        # the resumed rounds continue the same file.
+        jsonl = JsonlStreamSink(args.stream, append=args.resume)
+        manifest = build_manifest(cfg=cfg, scenario=scenario,
+                                  strategy=strategy, mesh=mesh,
+                                  extra={"shard": args.shard,
+                                         "seeds": args.seeds,
+                                         "clients": args.clients})
+        jsonl.write({"type": "manifest", **manifest})
+        sinks = [jsonl]
+        if args.prom:
+            sinks.append(PrometheusSink(args.prom))
+        stream = RoundStream(sinks, monitor=monitor)
 
     print(f"scenario={args.scenario} strategy={strategy.name} "
           f"K={args.clients} rounds={args.rounds} seeds={args.seeds}"
-          + (f" telemetry={args.telemetry}" if telemetry else ""))
+          + (f" telemetry={args.telemetry}" if args.telemetry else "")
+          + (f" stream={args.stream}" if args.stream else ""))
     t0 = time.perf_counter()
     if args.seeds > 1 or scenario.snr_grid:
         if args.shard == "clients":
@@ -178,7 +248,8 @@ def main() -> None:
             h = run_monte_carlo(init, apply, loss, topo, xs, ys, xte, yte,
                                 cfg, scenario=scenario, topo_cfg=tcfg,
                                 seeds=args.seeds, shard=args.shard,
-                                mesh=mesh, telemetry=telemetry, timers=timers)
+                                mesh=mesh, telemetry=telemetry, timers=timers,
+                                stream=stream)
         wall = time.perf_counter() - t0
         if args.assert_match_vmap and args.shard == "mc":
             h_ref = run_monte_carlo(init, apply, loss, topo, xs, ys, xte,
@@ -232,7 +303,7 @@ def main() -> None:
                            checkpoint_dir=args.checkpoint_dir,
                            checkpoint_every=args.checkpoint_every,
                            resume=args.resume, resume_step=args.resume_step,
-                           stop_after=args.stop_after)
+                           stop_after=args.stop_after, stream=stream)
         wall = time.perf_counter() - t0
         if timers is not None:
             with timers.phase("gather"):
@@ -256,14 +327,30 @@ def main() -> None:
     # --stop-after killed a checkpointed run at a segment boundary
     print(f"  {total_rounds} rounds total in {wall:.1f}s "
           f"({total_rounds / wall:.2f} rounds/s incl. compile)")
-    manifest = None
-    if telemetry or args.out:
+    if stream is not None:
+        abort = stream.should_abort
+        print(f"  stream: {stream.emitted} records -> {args.stream}"
+              + (f" ({stream.dropped} off-rank/off-scope dropped)"
+                 if stream.dropped else "")
+              + (f" [{len(stream.errors)} tap errors]"
+                 if stream.errors else ""))
+        if stream.monitor is not None:
+            s = stream.monitor.summary()
+            if s["alerts"]:
+                by = ", ".join(f"{k}×{v}" for k, v in s["by_rule"].items())
+                print(f"  ALERTS: {s['alerts']} ({by})"
+                      + ("; run aborted at checkpoint boundary — resume "
+                         "with --resume" if abort else ""))
+            else:
+                print("  alerts: none")
+        stream.close()
+    if manifest is None and (telemetry or args.out):
         manifest = build_manifest(cfg=cfg, scenario=scenario,
                                   strategy=strategy, mesh=mesh,
                                   extra={"shard": args.shard,
                                          "seeds": args.seeds,
                                          "clients": args.clients})
-    if telemetry:
+    if args.telemetry is not None:
         if timers is not None:
             for name, secs in timers.as_dict().items():
                 print(f"  phase {name:14s} {secs:8.3f}s")

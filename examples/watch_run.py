@@ -1,0 +1,203 @@
+"""Terminal watcher for a live `repro.obs.stream` JSONL.
+
+    PYTHONPATH=src python examples/run_scenario.py --stream live.jsonl \
+        --alerts &
+    PYTHONPATH=src python examples/watch_run.py live.jsonl --follow
+
+Tails the JSONL a streamed run (``run_scenario.py --stream``) appends to
+while its scan executes and renders, per trajectory: loss/accuracy
+sparklines, per-cluster loss, participation, the cumulative OTA
+channel-use ledger, and any active `repro.obs.monitor` alerts.  Also
+reads post-hoc telemetry files (``--telemetry`` / ``write_history``
+"round" records) — the live and post-hoc planes share field names by
+construction, so one renderer covers both.
+
+The default (``--once``) renders the current file state and exits;
+``--follow`` re-renders as the file grows (ANSI clear, 1 Hz).  ``--fail-on-alert`` exits 2 if any alert record is present —
+the CI chaos gate.  Stdlib only: safe to point at a file another
+process holds open.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+BLOCKS = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(vals, width: int = 24) -> str:
+    """Min-max normalized block sparkline of the last ``width`` values
+    (non-finite values render as spaces)."""
+    vals = list(vals)[-width:]
+    finite = [v for v in vals if v is not None and v == v
+              and abs(v) != float("inf")]
+    if not finite:
+        return " " * len(vals)
+    lo, hi = min(finite), max(finite)
+    span = (hi - lo) or 1.0
+    out = []
+    for v in vals:
+        if v is None or v != v or abs(v) == float("inf"):
+            out.append(" ")
+        else:
+            out.append(BLOCKS[int((len(BLOCKS) - 1) * (v - lo) / span)])
+    return "".join(out)
+
+
+def _traj_key(rec: dict) -> tuple:
+    return (rec.get("seed"), rec.get("snr_db"))
+
+
+class RunView:
+    """Incremental parse state of one stream/telemetry JSONL."""
+
+    def __init__(self):
+        self.manifest = None
+        self.trajs: dict = {}        # (seed, snr_db) -> [round records]
+        self.alerts: list = []
+        self.offset = 0              # bytes consumed so far
+        self.bad_lines = 0
+
+    def feed(self, path: str) -> int:
+        """Consume newly appended complete lines; returns #new records."""
+        new = 0
+        try:
+            size = os.path.getsize(path)
+        except OSError:
+            return 0
+        if size < self.offset:       # truncated/rewritten: start over
+            self.__init__()
+        with open(path, "r") as f:
+            f.seek(self.offset)
+            for line in f:
+                if not line.endswith("\n"):
+                    break            # partial line mid-append; retry later
+                self.offset += len(line.encode("utf-8"))
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except ValueError:
+                    self.bad_lines += 1
+                    continue
+                self._ingest(rec)
+                new += 1
+        return new
+
+    def _ingest(self, rec: dict) -> None:
+        kind = rec.get("type")
+        if kind == "manifest":
+            self.manifest = rec
+        elif kind in ("stream", "round"):
+            self.trajs.setdefault(_traj_key(rec), []).append(rec)
+        elif kind == "alert":
+            self.alerts.append(rec)
+        # summary/monitor/unknown records: nothing to draw
+
+    def render(self) -> str:
+        lines = []
+        if self.manifest is not None:
+            m = self.manifest
+            cfg = m.get("config", {}) if isinstance(m.get("config"), dict) \
+                else {}
+            bits = [str(m.get("scenario", m.get("name", "run"))),
+                    str(cfg.get("strategy", m.get("strategy", "")))]
+            head = " / ".join(b for b in bits if b)
+            if cfg.get("rounds"):
+                head += f"  rounds={cfg['rounds']}"
+            lines.append(f"watch: {head}")
+        total = sum(len(v) for v in self.trajs.values())
+        lines.append(f"{len(self.trajs)} trajectories, {total} round "
+                     f"records, {len(self.alerts)} alerts")
+        for key in sorted(self.trajs,
+                          key=lambda k: (k[0] or 0, k[1] or 0.0)):
+            recs = sorted(self.trajs[key], key=lambda r: r.get("round", 0))
+            last = recs[-1]
+            seed, snr = key
+            tag = "trajectory"
+            if seed is not None:
+                tag += f" seed={seed}"
+            if snr is not None:
+                tag += f" snr={snr:g}dB"
+            loss = [r.get("train_loss") for r in recs]
+            acc = [r.get("test_acc") for r in recs]
+            lines.append(f"{tag}  round {last.get('round', '?')}")
+            lines.append(f"  loss {sparkline(loss)} {loss[-1]:.4f}   "
+                         f"acc {sparkline(acc)} {acc[-1]:.3f}")
+            tele = last.get("telemetry") or {}
+            cl = tele.get("cluster_loss")
+            if cl:
+                per = " ".join(f"c{i}={v:.3f}" for i, v in enumerate(cl))
+                lines.append(f"  cluster loss: {per}")
+            if tele:
+                lines.append(
+                    f"  participants={_as_int(tele.get('participants'))}"
+                    f"  uses/round={_as_int(tele.get('channel_uses'))}"
+                    f"  cum_uses={_as_int(tele.get('cum_channel_uses'))}"
+                    f"  cum_symbols={_as_int(tele.get('cum_symbols'))}")
+        if self.alerts:
+            lines.append("ALERTS:")
+            for a in self.alerts[-8:]:
+                traj = a.get("trajectory") or {}
+                where = "" if traj.get("seed") is None \
+                    else f" seed={traj['seed']}"
+                lines.append(f"  [{a.get('rule')}] round "
+                             f"{a.get('round')}{where}: "
+                             f"{a.get('message', '')}")
+        if self.bad_lines:
+            lines.append(f"({self.bad_lines} unparseable lines skipped)")
+        return "\n".join(lines)
+
+
+def _as_int(v):
+    try:
+        return int(v)
+    except (TypeError, ValueError):
+        return "?"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", help="stream/telemetry JSONL to watch")
+    ap.add_argument("--follow", action="store_true",
+                    help="keep tailing and re-rendering as the file grows")
+    ap.add_argument("--once", action="store_true",
+                    help="render current state and exit (the default; "
+                         "overrides --follow)")
+    ap.add_argument("--interval", type=float, default=1.0,
+                    help="--follow poll interval in seconds")
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="--follow: stop after this many seconds without "
+                         "new records (default: run until interrupted)")
+    ap.add_argument("--fail-on-alert", action="store_true",
+                    help="exit 2 if any alert record is present (CI gate)")
+    args = ap.parse_args()
+    follow = args.follow and not args.once
+
+    view = RunView()
+    view.feed(args.path)
+    if follow:
+        quiet = 0.0
+        try:
+            while True:
+                sys.stdout.write("\x1b[2J\x1b[H" + view.render() + "\n")
+                sys.stdout.flush()
+                time.sleep(args.interval)
+                quiet = 0.0 if view.feed(args.path) else \
+                    quiet + args.interval
+                if args.timeout is not None and quiet >= args.timeout:
+                    break
+        except KeyboardInterrupt:
+            pass
+    print(view.render())
+    if args.fail_on_alert and view.alerts:
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,19 +1,28 @@
-"""repro.obs — observability: in-scan round telemetry, run manifests,
-JSONL sinks, the channel-use ledger, and profiling hooks (DESIGN.md §Obs).
+"""repro.obs — observability: in-scan round telemetry (post-hoc AND
+live-streamed), run manifests, JSONL sinks, the channel-use ledger, the
+alert monitor, and profiling hooks (DESIGN.md §Obs, §Obs-live).
 
 The substrate every scale PR logs into: `RoundTelemetry` rides the
 scenario engine's ``lax.scan`` (opt-in, bit-neutral when off),
-`build_manifest` stamps provenance into BENCH_*.json and scenario runs,
-`JsonlSink`/`write_history` persist a run's event stream, and
-`examples/obs_report.py` renders it into per-cluster convergence and
-communication-cost tables.
+`RoundStream` drains it to the host mid-run via an `io_callback` tap
+(`stream.py`) with `Monitor` alert rules checking the paper's c/T and
+eq. (5) envelopes in flight (`monitor.py`), `build_manifest` stamps
+provenance into BENCH_*.json and scenario runs, `JsonlSink`/
+`write_history` persist a run's event stream, and `examples/
+obs_report.py` / `examples/watch_run.py` render it post-hoc / live.
 """
 from repro.obs.ledger import (per_round_table, symbols_per_round,
                               uses_per_round)
 from repro.obs.manifest import (build_manifest, config_hash, device_info,
                                 git_revision, to_jsonable)
+from repro.obs.monitor import (Alert, AlertRule, ConsensusDriftRule,
+                               ConvergenceStallRule, Monitor,
+                               NonFiniteLossRule, PowerBudgetRule,
+                               QuarantineRateRule, default_rules)
 from repro.obs.profiling import PhaseTimers, profiler_trace
 from repro.obs.sink import JsonlSink, read_run, write_history
+from repro.obs.stream import (JsonlStreamSink, MemorySink, PrometheusSink,
+                              RoundStream, stream_tap)
 from repro.obs.telemetry import (RoundTelemetry, build_round_telemetry,
                                  init_ledger, per_client_dim,
                                  stacked_consensus_drift)

@@ -1,0 +1,425 @@
+"""In-scan streaming telemetry: the live path (DESIGN.md §Obs-live).
+
+`repro.obs.telemetry` made every round observable — but only *post hoc*:
+`RoundTelemetry` rides the scan outputs and is unreadable until the whole
+trajectory returns.  This module drains the same pytree to the host
+*while the scan is running* via `jax.experimental.io_callback`, behind
+the same STATIC-flag discipline the ``telemetry=`` flag established:
+
+* ``stream=None`` (default) adds **zero** equations — the traced jaxpr
+  is byte-identical to the streaming-unaware build (pinned by
+  ``tests/test_stream.py``);
+* ``stream=RoundStream(...)`` inserts one effectful callback per round
+  whose operands are values the body has *already computed* (the round's
+  ``jnp.mean(losses)``, ``acc`` and telemetry leaves) — never a second
+  reduction over a fusion-sensitive buffer — so streamed runs leave
+  ``train_loss``/``test_acc`` bit-for-bit unchanged.
+
+Ordering and fan-in (validated empirically on this jax):
+
+* single-trajectory scans and `shard_map` bodies tap PER ROUND inside
+  the scan body with ``ordered=True`` — records arrive on the host in
+  round order while the trajectory runs (:func:`stream_tap`);
+* Monte-Carlo sweeps `vmap` the trajectory, where the in-body tap is
+  impossible twice over: ordered callbacks cannot be batched ("Cannot
+  `vmap` ordered IO callback"), and even unordered, a batched in-scan
+  consumer of the round's loss re-fuses the vmapped reduction and
+  drifts the metrics by 1 ulp.  They tap PER TRAJECTORY after the scan
+  instead (:func:`stream_trajectory_tap`): the operands are the scan's
+  round-stacked output buffers — already materialized, so the consumer
+  is provably fusion-neutral — and the host expands them into the same
+  per-round records, tagged ``(round, seed, snr)`` because arrival
+  order means nothing under a batched unordered callback;
+* ordered effects are illegal inside `lax.cond`, so rank gating on a
+  mesh can never be a traced branch around the callback.  The clients
+  mesh passes ``lax.axis_index("clients")`` as a callback operand and
+  the *host* drops records from nonzero ranks; the mc mesh (where the
+  tap sits under `vmap` and `eval_shape` must trace it outside the mesh)
+  instead scopes the stream to rank 0's trajectory chunk by ``(seed,
+  snr)`` tag — same "rank-0 emit", no axis name needed at trace time.
+
+The host side is :class:`RoundStream`: a bounded ring buffer of raw
+numpy records (bitwise comparable against post-hoc telemetry) fanned out
+to pluggable sinks — :class:`MemorySink` for tests, JSONL append
+(tail-able mid-run by ``examples/watch_run.py``), and a Prometheus-style
+textfile — with an optional `repro.obs.monitor.Monitor` evaluating alert
+rules on every record.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from collections import deque
+from typing import Any, Optional, Sequence
+
+import numpy as np
+
+from repro.obs.manifest import to_jsonable
+
+STREAM_SCHEMA = "repro.obs.stream/v1"
+
+
+# ---------------------------------------------------------------------------
+# sinks
+# ---------------------------------------------------------------------------
+
+class MemorySink:
+    """Keeps every record as-is (numpy payloads preserved) — the bitwise
+    fixture for tests; no serialization loss."""
+
+    def __init__(self):
+        self.records: list[dict] = []
+
+    def write(self, record: dict) -> None:
+        self.records.append(record)
+
+    def close(self) -> None:
+        pass
+
+    def of_type(self, kind: str) -> list[dict]:
+        return [r for r in self.records if r.get("type") == kind]
+
+
+class JsonlStreamSink:
+    """Append-only JSONL, one json object per line, flushed per record so
+    ``examples/watch_run.py`` (or plain ``tail -f``) can follow the run
+    mid-flight.  ``append=True`` reopens an existing stream — the resume
+    path: a resumed run keeps appending to the same file and the absolute
+    round tags keep the stream monotone."""
+
+    def __init__(self, path, append: bool = False):
+        self.path = str(path)
+        self._f = open(self.path, "a" if append else "w")
+
+    def write(self, record: dict) -> None:
+        self._f.write(json.dumps(to_jsonable(record)) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        self._f.close()
+
+
+class PrometheusSink:
+    """Prometheus-style textfile exporter: rewrites ``path`` atomically on
+    every record with the latest gauge per (seed, snr) trajectory plus a
+    cumulative alert counter — point node_exporter's textfile collector
+    (or a test) at it."""
+
+    _GAUGES = (
+        ("round", "last streamed round (1-based)"),
+        ("train_loss", "streamed mean train loss"),
+        ("test_acc", "streamed test accuracy"),
+        ("participants", "effective transmit-side participation"),
+        ("consensus_drift_max", "max per-site ||theta_c - theta_bar||"),
+        ("cum_channel_uses", "cumulative OTA channel uses"),
+        ("cum_symbols", "cumulative scalar symbols"),
+    )
+
+    def __init__(self, path, prefix: str = "repro"):
+        self.path = str(path)
+        self.prefix = prefix
+        self._latest: dict[tuple, dict] = {}
+        self._alerts = 0
+        self._flush()
+
+    def write(self, record: dict) -> None:
+        kind = record.get("type")
+        if kind == "alert":
+            self._alerts += 1
+        elif kind == "stream":
+            key = (record.get("seed"), record.get("snr_db"))
+            tele = record.get("telemetry") or {}
+            drift = np.asarray(tele.get("consensus_drift", np.nan))
+            self._latest[key] = {
+                "round": record.get("round"),
+                "train_loss": record.get("train_loss"),
+                "test_acc": record.get("test_acc"),
+                "participants": tele.get("participants"),
+                "consensus_drift_max": (float(np.max(drift))
+                                        if drift.size else None),
+                "cum_channel_uses": tele.get("cum_channel_uses"),
+                "cum_symbols": tele.get("cum_symbols"),
+            }
+        else:
+            return
+        self._flush()
+
+    def _label(self, key: tuple) -> str:
+        seed, snr = key
+        parts = []
+        if seed is not None:
+            parts.append(f'seed="{seed}"')
+        if snr is not None:
+            parts.append(f'snr_db="{snr:g}"')
+        return "{" + ",".join(parts) + "}" if parts else ""
+
+    def _flush(self) -> None:
+        lines = []
+        for name, help_txt in self._GAUGES:
+            metric = f"{self.prefix}_{name}"
+            lines.append(f"# HELP {metric} {help_txt}")
+            lines.append(f"# TYPE {metric} gauge")
+            for key, vals in sorted(self._latest.items(),
+                                    key=lambda kv: repr(kv[0])):
+                v = vals.get(name)
+                if v is None:
+                    continue
+                lines.append(f"{metric}{self._label(key)} {float(v):g}")
+        metric = f"{self.prefix}_alerts_total"
+        lines.append(f"# HELP {metric} alert records emitted")
+        lines.append(f"# TYPE {metric} counter")
+        lines.append(f"{metric} {self._alerts}")
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write("\n".join(lines) + "\n")
+        os.replace(tmp, self.path)
+
+    def close(self) -> None:
+        self._flush()
+
+
+# ---------------------------------------------------------------------------
+# the host-side stream
+# ---------------------------------------------------------------------------
+
+def _np_tree(obj):
+    """Materialize a callback payload pytree as nested plain dicts of
+    numpy arrays (bit-preserving; no float round-trips)."""
+    if isinstance(obj, dict):
+        return {k: _np_tree(v) for k, v in obj.items()}
+    if hasattr(obj, "_asdict"):
+        return _np_tree(obj._asdict())
+    if isinstance(obj, (list, tuple)):
+        return [_np_tree(v) for v in obj]
+    return np.asarray(obj)
+
+
+def _tree_index(obj, t: int):
+    """Slice index ``t`` off every leaf's leading (round) axis of a
+    materialized payload tree."""
+    if isinstance(obj, dict):
+        return {k: _tree_index(v, t) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_tree_index(v, t) for v in obj]
+    return obj[t]
+
+
+class RoundStream:
+    """Host endpoint of the in-scan tap: bounded ring buffer + sink
+    fan-out + optional alert monitor.
+
+    The traced side calls :func:`stream_tap`, which lowers to one
+    ``io_callback`` per round invoking :meth:`_emit` with the round's
+    tags and telemetry.  ``_emit`` is host Python — it may run from XLA
+    callback threads, hence the lock — and must never raise (an
+    exception would poison the running computation), so sink failures
+    are swallowed into ``self.errors``.
+
+    ``capacity`` bounds the ring (old records drop; sinks saw them
+    already).  ``scope_to_trajectories`` restricts the stream to an
+    explicit ``(seed, snr)`` allow-list — how the mc-sharded path
+    implements rank-0 emit (see module docstring).  ``should_abort``
+    re-exports the monitor's escalation decision; the engine's
+    checkpointed drivers poll it at segment boundaries
+    (checkpoint-then-stop, resumable).
+    """
+
+    def __init__(self, sinks: Sequence = (), monitor=None,
+                 capacity: int = 4096):
+        self.sinks = list(sinks)
+        self.monitor = monitor
+        self.ring: deque = deque(maxlen=int(capacity))
+        self.errors: list[str] = []
+        self.emitted = 0
+        self.dropped = 0
+        self._scope: Optional[set] = None
+        self._lock = threading.Lock()
+
+    # -- configuration ------------------------------------------------
+
+    def scope_to_trajectories(self, tags) -> None:
+        """Keep only records whose ``(seed, snr_db)`` is in ``tags``
+        (snr ``None`` matches the no-sweep tap).  Used by
+        `monte_carlo_sharded` to scope the stream to rank 0's chunk."""
+        self._scope = {(int(s), None if q is None else float(np.float32(q)))
+                       for s, q in tags}
+
+    # -- host callback ------------------------------------------------
+
+    def _emit(self, payload) -> None:
+        """Per-round callback target (the ordered in-body tap)."""
+        try:
+            p = _np_tree(payload)
+            tags = self._tags(p)
+            if tags is None:
+                with self._lock:
+                    self.dropped += 1
+                return
+            self._ingest(self._round_record(
+                tags, int(p["t"]), p["loss"], p["acc"], p["tele"]))
+        except Exception as e:  # never poison the running computation
+            self.errors.append(repr(e))
+
+    def _emit_trajectory(self, payload) -> None:
+        """Per-trajectory callback target (the unordered post-scan tap
+        on vmapped Monte-Carlo paths): ``loss``/``acc``/``tele`` arrive
+        round-stacked (T leading) and expand into T round records."""
+        try:
+            p = _np_tree(payload)
+            tags = self._tags(p)
+            if tags is None:
+                with self._lock:
+                    self.dropped += 1
+                return
+            T = int(np.asarray(p["loss"]).shape[0])
+            for t in range(T):
+                self._ingest(self._round_record(
+                    tags, t, p["loss"][t], p["acc"][t],
+                    _tree_index(p["tele"], t)))
+        except Exception as e:
+            self.errors.append(repr(e))
+
+    def _tags(self, p) -> Optional[tuple]:
+        """(seed, snr_db) of a materialized payload, or ``None`` when the
+        record must drop (nonzero rank / outside the trajectory scope)."""
+        if int(p["rank"]) != 0:
+            return None
+        snr = float(p["snr"])
+        snr_db = None if np.isnan(snr) else snr
+        seed = int(p["seed"])
+        if self._scope is not None and (seed, snr_db) not in self._scope:
+            return None
+        return seed, snr_db
+
+    def _round_record(self, tags, t: int, loss, acc, tele) -> dict:
+        seed, snr_db = tags
+        return {
+            "type": "stream",
+            "schema": STREAM_SCHEMA,
+            "round": int(t) + 1,
+            "seed": seed,
+            "snr_db": snr_db,
+            "train_loss": loss,
+            "test_acc": acc,
+            "telemetry": tele,
+        }
+
+    def _ingest(self, rec: dict) -> None:
+        with self._lock:
+            self.emitted += 1
+            self.ring.append(rec)
+            self._write(rec)
+            if self.monitor is not None:
+                for alert in self.monitor.observe(rec):
+                    self._write(alert.to_record())
+
+    def _write(self, rec: dict) -> None:
+        for sink in self.sinks:
+            try:
+                sink.write(rec)
+            except Exception as e:  # pragma: no cover - sink failure
+                self.errors.append(repr(e))
+
+    # -- host-side inspection -----------------------------------------
+
+    def records(self) -> list[dict]:
+        with self._lock:
+            return list(self.ring)
+
+    def for_trajectory(self, seed: Optional[int] = None,
+                       snr_db: Optional[float] = None) -> list[dict]:
+        """Records for one trajectory, sorted by round (unordered mc
+        callbacks may interleave arrival order)."""
+        out = [r for r in self.records()
+               if (seed is None or r["seed"] == seed)
+               and (snr_db is None or r["snr_db"] == snr_db)]
+        return sorted(out, key=lambda r: r["round"])
+
+    @property
+    def should_abort(self) -> bool:
+        return self.monitor is not None and self.monitor.should_abort
+
+    @property
+    def escalates(self) -> bool:
+        """True when the attached monitor may request an abort — callers
+        must then provide checkpoint machinery to stop into."""
+        return (self.monitor is not None
+                and getattr(self.monitor, "abort_on_alert", False))
+
+    def close(self) -> None:
+        for sink in self.sinks:
+            try:
+                sink.close()
+            except Exception as e:  # pragma: no cover
+                self.errors.append(repr(e))
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+# ---------------------------------------------------------------------------
+# the traced-side tap
+# ---------------------------------------------------------------------------
+
+def _tap_payload(seed, snr, rank, loss, acc, telemetry) -> dict:
+    import jax.numpy as jnp
+
+    return {
+        "seed": jnp.asarray(seed, jnp.int32),
+        "snr": (jnp.full((), jnp.nan, jnp.float32) if snr is None
+                else jnp.asarray(snr, jnp.float32)),
+        "rank": (jnp.zeros((), jnp.int32) if rank is None
+                 else jnp.asarray(rank, jnp.int32)),
+        "loss": loss,
+        "acc": acc,
+        "tele": telemetry,
+    }
+
+
+def stream_tap(stream: RoundStream, *, t, seed, snr, loss, acc, telemetry,
+               rank=None, ordered: bool = True) -> None:
+    """Insert the per-round host callback into a traced scan body.
+
+    All operands are values the body already holds — this function adds
+    no arithmetic to the round.  ``t`` is the ABSOLUTE round index (a
+    scan input sliced by the checkpoint driver, so resumed segments keep
+    emitting absolute rounds); ``snr=None`` tags the record with
+    ``snr_db: null``; ``rank`` is a traced mesh index (host drops
+    nonzero ranks) or ``None`` outside meshes.
+
+    Only for UNBATCHED scan bodies (single-trajectory runs, shard_map'd
+    bodies).  Under `vmap` two things break: ordered callbacks cannot be
+    batched at all, and even an unordered in-body tap gives the round's
+    loss reduction a second in-scan consumer, which re-fuses the batched
+    reduction and drifts the metrics by 1 ulp — use
+    :func:`stream_trajectory_tap` after the scan instead (measured, and
+    pinned by tests/test_stream.py's bitwise assertions)."""
+    import jax.numpy as jnp
+    from jax.experimental import io_callback
+
+    payload = {"t": jnp.asarray(t, jnp.int32),
+               **_tap_payload(seed, snr, rank, loss, acc, telemetry)}
+    io_callback(stream._emit, None, payload, ordered=ordered)
+
+
+def stream_trajectory_tap(stream: RoundStream, *, seed, snr, loss, acc,
+                          telemetry, rank=None) -> None:
+    """Insert a per-trajectory host callback AFTER a traced scan.
+
+    The vmap-safe tap for Monte-Carlo sweeps: operands are the scan's
+    round-stacked outputs — already-materialized buffers, so giving them
+    a host consumer cannot re-fuse anything inside the scan and the
+    swept metrics stay bit-for-bit identical.  Unordered (vmap batches
+    the callback into one unbatched call per trajectory); the host
+    expands the (T,)-stacked payload into T tagged round records, so
+    downstream consumers see the same record schema as the live
+    per-round tap."""
+    from jax.experimental import io_callback
+
+    payload = _tap_payload(seed, snr, rank, loss, acc, telemetry)
+    io_callback(stream._emit_trajectory, None, payload, ordered=False)

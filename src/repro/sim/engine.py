@@ -102,7 +102,7 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
            topology: Topology, xs: jnp.ndarray, ys: jnp.ndarray,
            x_test: jnp.ndarray, y_test: jnp.ndarray, cfg: FLConfig,
            scenario: Scenario, topo_cfg: Optional[TopologyConfig],
-           telemetry: bool = False):
+           telemetry: bool = False, stream=None):
     """Returns ``(prepare, body)``: ``prepare(seed, snr_db)`` builds the
     scan carry + per-round inputs, ``body`` is the round function.  Both
     are pure jnp — jit them together (scan mode, Monte-Carlo vmap) or
@@ -113,8 +113,22 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
     the jaxpr is byte-identical, so the goldens replay bitwise.  When
     True the carry grows a cumulative channel-use ledger (``"obs"``) and
     ``body`` emits a third `RoundTelemetry` scan output assembled from
-    intermediates the round already computes (`repro.obs.telemetry`)."""
+    intermediates the round already computes (`repro.obs.telemetry`).
+
+    ``stream`` (STATIC, requires ``telemetry``) is an optional
+    `repro.obs.stream.RoundStream`: the scan inputs grow an absolute
+    ``(t, seed, snr)`` tag triple and the body ends with one ORDERED
+    `io_callback` draining the round's already-computed metrics +
+    telemetry to the host (`repro.obs.stream.stream_tap`) — no new
+    arithmetic, so streamed metrics stay bitwise.  Unbatched bodies
+    only: Monte-Carlo sweeps must NOT pass ``stream`` here (in-body
+    taps break under vmap) — `run_monte_carlo` wraps the trajectory
+    with the post-scan `stream_trajectory_tap` instead."""
     strategy = get_strategy(cfg.strategy)
+    if stream is not None and not telemetry:
+        raise ValueError(
+            "stream= drains RoundTelemetry and therefore needs "
+            "telemetry=True (the stream IS the telemetry, live)")
     if scenario.strategy is not None and scenario.strategy != strategy.name:
         # The scenario pins a preferred strategy (resolved by CLIs when no
         # explicit choice is given) but FLConfig.strategy always wins in
@@ -159,6 +173,19 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
         if telemetry:
             carry["obs"] = init_ledger()
         scan_xs = {"rkey": round_keys}
+        if stream is not None:
+            # Absolute round tags for the live tap.  These are scan
+            # INPUTS (not carried state) so the checkpoint driver's
+            # sliced(lo, hi) hands resumed segments their true absolute
+            # round indices and the stream continues seamlessly.
+            snr_tag = (jnp.full((), jnp.nan, jnp.float32) if snr_db is None
+                       else jnp.asarray(snr_db, jnp.float32))
+            scan_xs["stream"] = {
+                "t": jnp.arange(cfg.rounds, dtype=jnp.int32),
+                "seed": jnp.broadcast_to(jnp.asarray(seed, jnp.int32),
+                                         (cfg.rounds,)),
+                "snr": jnp.broadcast_to(snr_tag, (cfg.rounds,)),
+            }
         if not static:
             scan_xs["skey"] = jax.random.split(
                 jax.random.fold_in(key, _SIM_SALT), cfg.rounds)
@@ -337,7 +364,18 @@ def _build(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
                 num_clients=K, num_clusters=cfg.num_clusters,
                 ledger=carry["obs"], reclustered=reclustered,
                 fault_extras=fault_extras)
-            return carry, (jnp.mean(losses), acc, tele)
+            train_loss = jnp.mean(losses)
+            if stream is not None:
+                # Live tap: operands are the values this round already
+                # computed — the tap adds an effect, never an equation
+                # (stream-on metrics stay bitwise; pinned by
+                # tests/test_stream.py).
+                from repro.obs.stream import stream_tap
+                stream_tap(stream, t=inp["stream"]["t"],
+                           seed=inp["stream"]["seed"],
+                           snr=inp["stream"]["snr"], loss=train_loss,
+                           acc=acc, telemetry=tele, ordered=True)
+            return carry, (train_loss, acc, tele)
 
         return body
 
@@ -382,7 +420,8 @@ def checkpoint_manifest(directory, cfg, scenario, strategy_name: str,
 def _run_scan_checkpointed(fn, carry, scan_xs, T: int, directory,
                            every: int, *, resume: bool,
                            resume_step: Optional[int], stop_after:
-                           Optional[int], cfg, scenario, strategy_name: str):
+                           Optional[int], cfg, scenario, strategy_name: str,
+                           stream=None):
     """Drive the scanned trajectory in checkpointed segments.
 
     The T-round scan is split at every ``every`` rounds; after each
@@ -399,7 +438,10 @@ def _run_scan_checkpointed(fn, carry, scan_xs, T: int, directory,
 
     Returns ``(carry, out, rounds_done)``; ``rounds_done < T`` only when
     ``stop_after`` deliberately kills the run at a segment boundary (the
-    CI chaos-smoke's crash stand-in).
+    CI chaos-smoke's crash stand-in) or an attached ``stream``'s monitor
+    escalated an alert to an abort (`repro.obs.monitor`) — in both cases
+    the segment's checkpoint is already on disk, so the run resumes
+    exactly where it stopped (checkpoint-then-stop).
     """
     from repro.checkpoint import (latest_step, load_checkpoint,
                                   save_checkpoint)
@@ -441,6 +483,15 @@ def _run_scan_checkpointed(fn, carry, scan_xs, T: int, directory,
         save_checkpoint(directory, pos, {"carry": carry, "out": acc})
         if stop_after is not None and pos >= int(stop_after) and pos < T:
             break
+        if stream is not None:
+            # Callbacks dispatch asynchronously; drain the segment's
+            # records before polling the monitor's escalation decision.
+            jax.effects_barrier()
+        if stream is not None and stream.should_abort and pos < T:
+            # Alert escalation: the ordered tap has already drained this
+            # segment's rounds, the checkpoint above has the full carry —
+            # stop here, resumable.
+            break
     return carry, acc, pos
 
 
@@ -476,7 +527,8 @@ def run_rounds(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
                checkpoint_every: int = 0,
                resume: bool = False,
                resume_step: Optional[int] = None,
-               stop_after: Optional[int] = None) -> dict[str, Any]:
+               stop_after: Optional[int] = None,
+               stream=None) -> dict[str, Any]:
     """Run one FL trajectory; returns history with on-device arrays.
 
     ``mode="scan"`` (default): the whole trajectory is one jit — no
@@ -505,12 +557,34 @@ def run_rounds(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
     identical to an uninterrupted run.  ``stop_after=r`` deliberately
     exits at the first segment boundary ≥ r (crash simulation — CI's
     chaos-smoke).  Scan mode only; ``mode="loop"`` raises.
+
+    ``stream`` (STATIC, needs ``telemetry=True``): a
+    `repro.obs.stream.RoundStream` drained live from inside the scan via
+    an ordered `io_callback` — records arrive on the host in round order
+    while the trajectory runs, metrics stay bitwise, and with
+    ``stream=None`` the traced jaxpr is byte-identical to a
+    streaming-unaware build.  A stream whose monitor escalates alerts to
+    aborts requires ``checkpoint_dir`` (the abort IS a
+    checkpoint-then-stop); scan mode only.
     """
     scenario = scenario or Scenario()
     if checkpoint_dir is None and (resume or stop_after is not None):
         raise ValueError(
             "resume/stop_after need checkpoint_dir — there is nothing to "
             "restore from or checkpoint into")
+    if stream is not None:
+        if not telemetry:
+            raise ValueError(
+                "stream= drains RoundTelemetry live and needs "
+                "telemetry=True")
+        if mode != "scan":
+            raise ValueError(
+                "stream= taps the scanned trajectory; mode='loop' already "
+                "has a live per-round progress callback")
+        if stream.escalates and checkpoint_dir is None:
+            raise ValueError(
+                "abort-on-alert escalates via the checkpoint machinery "
+                "(checkpoint-then-stop, resumable); pass checkpoint_dir")
     if checkpoint_dir is not None:
         if mode != "scan":
             raise ValueError(
@@ -537,10 +611,11 @@ def run_rounds(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
             init_fn, apply_fn, loss_fn, topology, xs, ys, x_test, y_test,
             cfg, scenario=scenario, mesh=mesh, telemetry=telemetry,
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
-            resume=resume, resume_step=resume_step, stop_after=stop_after)
+            resume=resume, resume_step=resume_step, stop_after=stop_after,
+            stream=stream)
     prepare, make_body = _build(init_fn, apply_fn, loss_fn, topology, xs, ys,
                                 x_test, y_test, cfg, scenario, topo_cfg,
-                                telemetry=telemetry)
+                                telemetry=telemetry, stream=stream)
     T = cfg.rounds
 
     # `prepare` runs EAGERLY in both modes — the same eager/jit boundary the
@@ -559,7 +634,8 @@ def run_rounds(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
                 fn, carry, scan_xs, T, checkpoint_dir, checkpoint_every,
                 resume=resume, resume_step=resume_step,
                 stop_after=stop_after, cfg=cfg, scenario=scenario,
-                strategy_name=get_strategy(cfg.strategy).name)
+                strategy_name=get_strategy(cfg.strategy).name,
+                stream=stream)
         elif timers is not None:
             with timers.phase("trace_compile"):
                 fn = fn.lower(carry, scan_xs).compile()
@@ -567,6 +643,11 @@ def run_rounds(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
                 carry, out = jax.block_until_ready(fn(carry, scan_xs))
         else:
             carry, out = fn(carry, scan_xs)
+        if stream is not None:
+            # The tap's callbacks are asynchronous; make sure every round
+            # reached the host before the caller inspects the stream.
+            jax.block_until_ready(out)
+            jax.effects_barrier()
         if telemetry:
             loss, acc, tele = out
         else:
@@ -623,7 +704,8 @@ def run_monte_carlo(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
                     shard: Optional[str] = None,
                     mesh=None,
                     telemetry: bool = False,
-                    timers=None) -> dict[str, Any]:
+                    timers=None,
+                    stream=None) -> dict[str, Any]:
     """Monte-Carlo grid: ``seeds`` × ``snr_grid`` full trajectories in ONE
     jit (vmap over the seed axis, vmap over the scenario-scalar axis,
     `lax.scan` over rounds inside).
@@ -638,14 +720,37 @@ def run_monte_carlo(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
     with ``telemetry=True`` a trajectory-batched `RoundTelemetry` rides
     under ``history["telemetry"]`` (leading axes (S,[G,]T)).  ``timers``:
     optional `PhaseTimers` — see `run_rounds`.
+
+    ``stream`` (STATIC, needs ``telemetry=True``): per-round records for
+    every trajectory in the sweep.  The trajectory is vmapped, so the
+    tap sits AFTER each trajectory's scan (`stream_trajectory_tap` on
+    the round-stacked outputs — in-body taps either cannot batch
+    (ordered) or re-fuse the vmapped loss reduction by a ulp
+    (unordered); the post-scan tap reads materialized buffers and keeps
+    the sweep bitwise) and the callback is unordered — consumers key on
+    the explicit ``(seed, snr_db, round)`` tags, never arrival order.
+    Under ``shard="mc"`` the stream is scoped to rank 0's trajectory
+    chunk (rank-0 emit; see `repro.sim.sharded`).
     """
     scenario = scenario or Scenario()
     if snr_grid is None and scenario.snr_grid:
         snr_grid = scenario.snr_grid
+    if stream is not None and not telemetry:
+        raise ValueError(
+            "stream= drains RoundTelemetry live and needs telemetry=True")
     prepare, make_body = _build(init_fn, apply_fn, loss_fn, topology, xs, ys,
                                 x_test, y_test, cfg, scenario, topo_cfg,
                                 telemetry=telemetry)
     traj = make_trajectory_fn(prepare, make_body)
+    if stream is not None:
+        from repro.obs.stream import stream_trajectory_tap
+        base_traj = traj
+
+        def traj(seed, snr_db):
+            loss, acc, tele = base_traj(seed, snr_db)
+            stream_trajectory_tap(stream, seed=seed, snr=snr_db, loss=loss,
+                                  acc=acc, telemetry=tele)
+            return loss, acc, tele
 
     def _run(fn, *a):
         fn = jax.jit(fn)
@@ -667,7 +772,7 @@ def run_monte_carlo(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
         from repro.sim import sharded
         out = sharded.monte_carlo_sharded(
             traj, seed_arr, snr_grid, cfg.snr_db, cfg.rounds, mesh=mesh,
-            telemetry=telemetry)
+            telemetry=telemetry, stream=stream)
         if telemetry:
             loss, acc, grid, tele = out
         else:
@@ -687,6 +792,9 @@ def run_monte_carlo(init_fn: Callable, apply_fn: Callable, loss_fn: Callable,
             loss, acc, tele = out
         else:
             loss, acc = out
+    if stream is not None:
+        jax.block_until_ready(loss)
+        jax.effects_barrier()
     history = {
         "train_loss": loss,
         "test_acc": acc,

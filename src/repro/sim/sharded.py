@@ -113,7 +113,8 @@ def make_sharded_sweep_fn(traj, n_pad: int, rounds: int, mesh,
 
 
 def monte_carlo_sharded(traj, seeds: jnp.ndarray, snr_grid, snr_db,
-                        rounds: int, mesh=None, telemetry: bool = False):
+                        rounds: int, mesh=None, telemetry: bool = False,
+                        stream=None):
     """Run the flattened seeds × SNR grid under ``shard_map`` on the ``mc``
     mesh axis.
 
@@ -124,6 +125,15 @@ def monte_carlo_sharded(traj, seeds: jnp.ndarray, snr_grid, snr_db,
     (``traj`` must be a telemetry-enabled build) the return grows a
     fourth element — the `RoundTelemetry` pytree with (S,[G,]T) leading
     axes, unpadded and grid-reshaped exactly like the metric buffers.
+
+    ``stream``: when ``traj`` carries a stream tap
+    (`run_monte_carlo`'s post-scan `stream_trajectory_tap` wrapper —
+    unordered, since the tap sits under the per-device vmap), the
+    stream is scoped to rank 0's contiguous trajectory chunk by
+    ``(seed, snr)`` tag before launch — "rank-0 emit" without a
+    trace-time axis name, which would break the `eval_shape` the sweep
+    factory uses for telemetry out-specs (``lax.axis_index`` is unbound
+    outside the mesh body).
     """
     if mesh is None:
         mesh = make_mc_mesh()
@@ -151,6 +161,22 @@ def monte_carlo_sharded(traj, seeds: jnp.ndarray, snr_grid, snr_db,
     n_pad = -(-n // n_dev) * n_dev
     seed_flat = _pad_to(seed_flat, n_pad)
 
+    if stream is not None:
+        # Rank-0 emit: shard_map splits the flat trajectory axis into
+        # contiguous per-device chunks, so rank 0 owns the first
+        # n_pad / n_dev trajectories — scope the host stream to their
+        # (seed, snr) tags (padding repeats the LAST entry, so rank 0's
+        # chunk is all-real whenever it holds any real trajectory).
+        chunk = n_pad // n_dev
+        seeds_np = np.asarray(seed_flat)[:min(chunk, n)]
+        if snr_flat is not None:
+            snrs_np = np.asarray(snr_flat)[:min(chunk, n)]
+            stream.scope_to_trajectories(zip(seeds_np, snrs_np))
+        else:
+            snr0 = None if snr_db is None else float(np.float32(snr_db))
+            stream.scope_to_trajectories(
+                (s, snr0) for s in seeds_np)
+
     f = make_sharded_sweep_fn(traj, n_pad, rounds, mesh, snr_db=snr_db,
                               with_grid=snr_flat is not None,
                               telemetry=telemetry)
@@ -161,6 +187,9 @@ def monte_carlo_sharded(traj, seeds: jnp.ndarray, snr_grid, snr_db,
         tele = jax.tree.map(lambda x: x[:n], tele)
     else:
         loss, acc = f(*args)
+    if stream is not None:
+        jax.block_until_ready(loss)
+        jax.effects_barrier()
 
     loss, acc = loss[:n], acc[:n]
     if grid is not None:
@@ -267,8 +296,8 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
                               checkpoint_every: int = 0,
                               resume: bool = False,
                               resume_step: Optional[int] = None,
-                              stop_after: Optional[int] = None
-                              ) -> dict[str, Any]:
+                              stop_after: Optional[int] = None,
+                              stream=None) -> dict[str, Any]:
     """One trajectory with the stacked K-client axis sharded over a
     ``("clients",)`` mesh: per-rank local training (vmap over K/n local
     clients) + the `psum`-riding CWFL sync, scanned over rounds.
@@ -295,15 +324,35 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
     unsharded checkpoints — equal only to psum-reassociation ulps —
     can never be spliced).  With checkpointing off the traced
     computation is byte-identical to before (static-flag discipline).
+
+    ``stream`` (STATIC, needs ``telemetry=True``): a
+    `repro.obs.stream.RoundStream` tapped from inside the shard_map'd
+    scan body — every rank fires the callback on its replicated round
+    values and passes ``lax.axis_index("clients")`` along, and the host
+    keeps rank 0 only (effects cannot hide behind a traced `lax.cond`),
+    so the stream carries exactly one record per round.  The callback
+    is unordered (an ordered effect token inside a jitted shard_map
+    aborts XLA's sharding propagation on this toolchain); each record's
+    absolute round tag carries the ordering instead.
     """
     from repro.sim.engine import _build, checkpoint_manifest
 
     scenario = scenario or Scenario()
     ckpt = checkpoint_dir is not None
+    streaming = stream is not None
     if not ckpt and (resume or stop_after is not None):
         raise ValueError(
             "resume/stop_after need checkpoint_dir — there is nothing to "
             "restore from or checkpoint into")
+    if streaming:
+        if not telemetry:
+            raise ValueError(
+                "stream= drains RoundTelemetry live and needs "
+                "telemetry=True")
+        if stream.escalates and not ckpt:
+            raise ValueError(
+                "abort-on-alert escalates via the checkpoint machinery "
+                "(checkpoint-then-stop, resumable); pass checkpoint_dir")
     if not scenario.is_static:
         raise NotImplementedError(
             "shard='clients' supports static scenarios only (dynamic "
@@ -349,12 +398,20 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
         jnp.float32)
 
     def traj(stacked0, opt0, cons0, xs_l, ys_l, rkeys, *extra):
-        # extra = (ledger0,) on the checkpointed telemetry path — the
-        # cumulative channel-use ledger must survive a resume, so it
-        # becomes an explicit input instead of a closure-side init.
+        # extra = ([sts] when streaming) + ([ledger0] on the checkpointed
+        # telemetry path) — absolute round indices for the stream tap
+        # (sliced alongside rkeys by the segment driver, so a resumed
+        # stream keeps absolute rounds) and the cumulative channel-use
+        # ledger that must survive a resume.
+        extra = list(extra)
+        sts = extra.pop(0) if streaming else None
         r = jax.lax.axis_index("clients")
 
-        def body(carry, rkey):
+        def body(carry, inp):
+            if streaming:
+                rkey, st_t = inp
+            else:
+                rkey, st_t = inp, None
             if telemetry:
                 st, opt, _, ledger = carry
             else:
@@ -395,19 +452,32 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
                 cum_symbols=new_ledger["symbols"],
                 reclustered=jnp.zeros((), jnp.float32),
                 extras=extras)
+            if streaming:
+                # In-body tap on replicated round values; the axis index
+                # rides the payload and the host drops ranks != 0.
+                # UNORDERED: an ordered effect token inside a jitted
+                # shard_map trips XLA's sharding-propagation parameter
+                # check (hard abort at compile time on this toolchain) —
+                # the absolute round tag in the payload carries the
+                # ordering instead, and consumers sort by it.
+                from repro.obs.stream import stream_tap
+                stream_tap(stream, t=st_t, seed=cfg.seed, snr=cfg.snr_db,
+                           loss=loss, acc=acc, telemetry=tele, rank=r,
+                           ordered=False)
             return (new, opt, consensus, new_ledger), (loss, acc, tele)
 
+        xs_scan = (rkeys, sts) if streaming else rkeys
         if telemetry:
-            ledger0 = extra[0] if extra else init_ledger()
+            ledger0 = extra.pop(0) if ckpt else init_ledger()
             (st_f, opt_f, final, ledger_f), out = jax.lax.scan(
-                body, (stacked0, opt0, cons0, ledger0), rkeys,
+                body, (stacked0, opt0, cons0, ledger0), xs_scan,
                 unroll=_SCAN_UNROLL)
             loss, acc, tele = out
             if ckpt:
                 return loss, acc, final, tele, st_f, opt_f, ledger_f
             return loss, acc, final, tele
         (st_f, opt_f, final), (loss, acc) = jax.lax.scan(
-            body, (stacked0, opt0, cons0), rkeys, unroll=_SCAN_UNROLL)
+            body, (stacked0, opt0, cons0), xs_scan, unroll=_SCAN_UNROLL)
         if ckpt:
             return loss, acc, final, st_f, opt_f
         return loss, acc, final
@@ -418,8 +488,11 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
                                        mesh)
     rep = lambda tree: jax.tree.map(lambda _: P(), tree)
     ledger0 = init_ledger() if telemetry else None
+    sts_full = jnp.arange(T, dtype=jnp.int32) if streaming else None
     in_specs: tuple = (k_spec(stacked), k_spec(opt_state), rep(params0),
                        P("clients"), P("clients"), P())
+    if streaming:
+        in_specs = in_specs + (P(),)          # sts: replicated round tags
     out_specs: tuple = (P(), P(), rep(params0))
     if telemetry:
         # Every telemetry value is psum-replicated or a rank-constant —
@@ -444,7 +517,13 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
 
     tele = None
     if not ckpt:
-        out = fj(stacked, opt_state, params0, xs, ys, round_keys)
+        args = (stacked, opt_state, params0, xs, ys, round_keys)
+        if streaming:
+            args = args + (sts_full,)
+        out = fj(*args)
+        if streaming:
+            jax.block_until_ready(out)
+            jax.effects_barrier()
         if telemetry:
             loss, acc, consensus, tele = out
         else:
@@ -455,7 +534,8 @@ def run_rounds_client_sharded(init_fn, apply_fn, loss_fn, topology,
             T, cfg, scenario, strategy, telemetry=telemetry,
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
             resume=resume, resume_step=resume_step, stop_after=stop_after,
-            manifest_fn=checkpoint_manifest)
+            manifest_fn=checkpoint_manifest, stream=stream,
+            sts_full=sts_full)
 
     history = {
         "round": np.arange(1, int(loss.shape[0]) + 1),
@@ -475,7 +555,7 @@ def _client_sharded_checkpointed(fj, stacked, opt_state, params0, ledger0,
                                  strategy, *, telemetry: bool,
                                  checkpoint_dir, checkpoint_every: int,
                                  resume: bool, resume_step, stop_after,
-                                 manifest_fn):
+                                 manifest_fn, stream=None, sts_full=None):
     """Segment driver for the checkpointed client-sharded trajectory —
     the `engine._run_scan_checkpointed` contract on the shard_map path:
     run ``checkpoint_every``-round chunks, persist the full carry +
@@ -495,8 +575,12 @@ def _client_sharded_checkpointed(fj, stacked, opt_state, params0, ledger0,
     manifest_fn(directory, cfg, scenario, strategy.name + "@clients",
                 resume)
 
-    def call(st, opt, cons, ld, keys):
+    streaming = stream is not None
+
+    def call(st, opt, cons, ld, keys, sts_seg):
         args = (st, opt, cons, xs, ys, keys)
+        if streaming:
+            args = args + (sts_seg,)
         if telemetry:
             args = args + (ld,)
         return fj(*args)
@@ -505,6 +589,8 @@ def _client_sharded_checkpointed(fj, stacked, opt_state, params0, ledger0,
         # Abstract-evaluate the jitted shard_map fn for an n-round chunk:
         # the (loss, acc[, telemetry]) accumulator template for resume.
         args = (stacked, opt_state, params0, xs, ys, round_keys[:n])
+        if streaming:
+            args = args + (sts_full[:n],)
         if telemetry:
             args = args + (ledger0,)
         shapes = jax.eval_shape(fj, *args)
@@ -537,7 +623,8 @@ def _client_sharded_checkpointed(fj, stacked, opt_state, params0, ledger0,
     pos = start
     while pos < T:
         end = min(pos + every, T)
-        res = call(st, opt, cons, ld, round_keys[pos:end])
+        res = call(st, opt, cons, ld, round_keys[pos:end],
+                   sts_full[pos:end] if streaming else None)
         if telemetry:
             loss_s, acc_s, cons, tele_s, st, opt, ld = res
             seg = (loss_s, acc_s, tele_s)
@@ -554,6 +641,10 @@ def _client_sharded_checkpointed(fj, stacked, opt_state, params0, ledger0,
         save_checkpoint(directory, pos, payload)
         if stop_after is not None and pos >= int(stop_after) and pos < T:
             break
+        if streaming:
+            jax.effects_barrier()   # drain the segment before polling
+            if stream.should_abort and pos < T:
+                break
 
     if telemetry:
         return acc_out[0], acc_out[1], cons, acc_out[2]

@@ -1,0 +1,98 @@
+"""Bench regression gate (benchmarks/compare.py).
+
+The CI contract: throughput ratios gate with a generous noise tolerance,
+deterministic fields (modeled bytes, bitwise-parity bits) gate EXACTLY,
+meta entries are skipped, and an empty intersection fails loudly instead
+of vacuously passing."""
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_COMPARE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "compare.py")
+spec = importlib.util.spec_from_file_location("bench_compare", _COMPARE)
+bench_compare = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(bench_compare)
+
+BASE = {
+    "sim_scan": {"us": 100000.0, "rounds_per_sec": 60.0,
+                 "compile_seconds": 5.0},
+    "sim_sharded": {"traj_per_sec": 30.0, "bitwise_equal_vs_vmap": True},
+    "kernel": {"us": 2000.0, "modeled_hbm_bytes": 77040000},
+    "run_manifest": {"host": "a"},
+    "throughput_vs_previous_file": {"sim_scan": 1.0},
+}
+
+
+def _mutated(**overrides):
+    fresh = json.loads(json.dumps(BASE))
+    for name, fields in overrides.items():
+        fresh[name].update(fields)
+    return fresh
+
+
+def test_identical_files_green():
+    r = bench_compare.compare(BASE, BASE, max_regression=0.5)
+    assert r["failures"] == []
+    assert r["matched"] == 3            # meta entries skipped
+
+
+def test_throughput_regression_trips():
+    fresh = _mutated(sim_scan={"rounds_per_sec": 20.0})   # 3x slower
+    r = bench_compare.compare(BASE, fresh, max_regression=0.5)
+    assert any("rounds_per_sec" in f for f in r["failures"])
+    # ...but within tolerance passes.
+    fresh = _mutated(sim_scan={"rounds_per_sec": 40.0})   # -33% < 50%
+    assert not bench_compare.compare(BASE, fresh, 0.5)["failures"]
+
+
+def test_latency_is_lower_better():
+    fresh = _mutated(kernel={"us": 5000.0})               # 2.5x slower
+    r = bench_compare.compare(BASE, fresh, max_regression=0.5)
+    assert any("kernel.us" in f for f in r["failures"])
+    fresh = _mutated(kernel={"us": 100.0})                # faster: fine
+    assert not bench_compare.compare(BASE, fresh, 0.5)["failures"]
+
+
+def test_exact_fields_gate_regardless_of_tolerance():
+    fresh = _mutated(sim_sharded={"bitwise_equal_vs_vmap": False})
+    r = bench_compare.compare(BASE, fresh, max_regression=10.0)
+    assert any("bitwise_equal_vs_vmap" in f for f in r["failures"])
+    fresh = _mutated(kernel={"modeled_hbm_bytes": 1})
+    r = bench_compare.compare(BASE, fresh, max_regression=10.0)
+    assert any("modeled_hbm_bytes" in f for f in r["failures"])
+
+
+def test_compile_seconds_is_informational():
+    fresh = _mutated(sim_scan={"compile_seconds": 500.0})
+    assert not bench_compare.compare(BASE, fresh, 0.5)["failures"]
+
+
+def test_markdown_table_marks_failures():
+    fresh = _mutated(sim_scan={"rounds_per_sec": 1.0})
+    r = bench_compare.compare(BASE, fresh, max_regression=0.5)
+    table = bench_compare.markdown_table(r, "t")
+    assert "| sim_scan | rounds_per_sec |" in table and "❌" in table
+
+
+@pytest.mark.parametrize("fresh,code", [
+    (BASE, 0),                                            # green
+    (_mutated(sim_scan={"rounds_per_sec": 1.0}), 1),      # regression
+    ({"other_bench": {"us": 1.0}}, 2),                    # no overlap
+])
+def test_cli_exit_codes(tmp_path, fresh, code):
+    b, f = tmp_path / "base.json", tmp_path / "fresh.json"
+    b.write_text(json.dumps(BASE))
+    f.write_text(json.dumps(fresh))
+    md = tmp_path / "delta.md"
+    r = subprocess.run(
+        [sys.executable, _COMPARE, str(b), str(f),
+         "--max-regression", "0.5", "--markdown", str(md)],
+        capture_output=True, text=True)
+    assert r.returncode == code, r.stdout + r.stderr
+    if code != 2:
+        assert md.exists() and "Bench delta" in md.read_text()
